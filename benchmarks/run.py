@@ -1,0 +1,309 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus readable detail to
+stderr-ish sections). CPU-sized models stand in for BERT/GPT2; the TPU-v5e
+analytic cost model stands in for on-device latency tables where the paper
+used V100/A100 measurements (DESIGN.md §3).
+
+  table1  GPT2 pruning-for-throughput vs pruning-for-latency (§4.2)
+  table2  one-shot ZipLM vs magnitude/Fisher baselines (§4.3)
+  table3  MLP-size speedups on two device capabilities
+  table4  calibration-size sensitivity
+  table7  latency table (Appendix E)
+  table8  target-vs-achieved speedup deviation (Appendix F)
+  fig5    scaling law: loss vs speedup linear fit
+  fig2    gradual pruning family (reduced)
+  kernels Pallas kernel vs ref oracle timing/correctness
+  roofline  reads results/dryrun/*.json (deliverable g)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import GPT2_SMALL
+from repro.configs.base import TrainConfig
+from repro.core.database import apply_assignment, build_database
+from repro.core.hessian import collect_hessians
+from repro.core.latency import build_table
+from repro.core.magnitude import baseline_database, uniform_assignment
+from repro.core.oneshot import calib_loss_fn, oneshot_prune
+from repro.core.pipeline import gradual_prune
+from repro.core.shrink import shrink
+from repro.core.structures import registry
+from repro.data import calibration_batches, synthetic_stream
+from repro.models import model_init
+from repro.models.pruned import forward_pruned
+from repro.models.transformer import forward
+from repro.runtime.costmodel import InferenceEnv, ffn_time
+from repro.train.train_step import make_train_state, make_train_step
+
+ROWS = []
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=4, d_model=96, d_ff=384, num_heads=6,
+    num_kv_heads=6, head_dim=16, vocab_size=384, dtype="float32")
+ENV = InferenceEnv(batch=16, seq=128, mode="prefill")
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _timeit(f, *args, reps=3):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+_STATE = {}
+
+
+def trained_model():
+    if "params" in _STATE:
+        return _STATE["params"], _STATE["losses"]
+    params, _ = model_init(TINY, jax.random.key(0))
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10, total_steps=150)
+    step = jax.jit(make_train_step(TINY, tcfg))
+    state = make_train_state(TINY, params, tcfg)
+    data = synthetic_stream(TINY, 16, 64, seed=7)
+    losses = []
+    t0 = time.perf_counter()
+    for _ in range(150):
+        state, m = step(state, next(data))
+        losses.append(float(m["loss"]))
+    us = (time.perf_counter() - t0) / 150 * 1e6
+    row("train_step", us, f"loss {losses[0]:.3f}->{losses[-1]:.3f}")
+    _STATE["params"] = state.params
+    _STATE["losses"] = losses
+    _STATE["calib"] = calibration_batches(TINY, 32, 64, batch=8)
+    return state.params, losses
+
+
+def bench_table7_latency_table():
+    """Appendix E: the latency table itself (costmodel backend, v5e; plus a
+    measured-on-CPU build to exercise the paper's own procedure)."""
+    t0 = time.perf_counter()
+    tab = build_table(GPT2_SMALL, InferenceEnv(batch=128, seq=384,
+                                               mode="prefill"),
+                      backend="costmodel")
+    us = (time.perf_counter() - t0) * 1e6
+    heads = [f"{int(g)}h={tab.module_time('attn', g)*1e6:.0f}us"
+             for g in tab.grids["attn"][::4]]
+    row("table7_latency_v5e", us, " ".join(heads[:4]))
+    t0 = time.perf_counter()
+    mtab = build_table(TINY, ENV, backend="measure", grid_subsample=8,
+                       reps=2)
+    us = (time.perf_counter() - t0) * 1e6
+    row("table7_latency_measured_cpu", us,
+        f"ffn_dense={mtab.module_time('ffn', 0)*1e6:.0f}us")
+
+
+def bench_table3_mlp_speedups():
+    """Table 3: identical sparsity, very different speedups on different
+    device capabilities (v5e-1 vs v5e-TP4 standing in for V100 vs A100)."""
+    sizes = [3072, 1814, 1322, 302, 130, 76, 33]
+    env1 = InferenceEnv(batch=128, seq=128, mode="prefill", tp=1)
+    env4 = InferenceEnv(batch=128, seq=128, mode="prefill", tp=4)
+    cfg = GPT2_SMALL
+    base1 = ffn_time(cfg, env1, 3072)
+    base4 = ffn_time(cfg, env4, 3072)
+    out = []
+    for s in sizes:
+        s1 = base1 / ffn_time(cfg, env1, s)
+        s4 = base4 / ffn_time(cfg, env4, s)
+        out.append(f"{s}:{s1:.1f}x/{s4:.1f}x")
+    row("table3_mlp_speedup", 0.0, " ".join(out))
+
+
+def bench_table2_oneshot():
+    """Table 2: one-shot ZipLM vs magnitude & Fisher baselines at the same
+    guaranteed speedups."""
+    params, _ = trained_model()
+    calib = _STATE["calib"]
+    t0 = time.perf_counter()
+    res = oneshot_prune(TINY, params, calib, ENV, targets=[1.5, 2.0],
+                        search_steps=30, seed=0)
+    us = (time.perf_counter() - t0) * 1e6
+    tab = res.table
+    loss = calib_loss_fn(TINY, calib[:1])
+    hess = collect_hessians(TINY, params, calib)
+    detail = [f"dense={res.dense_loss:.4f}"]
+    for t in [1.5, 2.0]:
+        parts = [f"zip={res.variants[t].calib_loss:.4f}"]
+        for kind in ["magnitude", "fisher"]:
+            bdb = baseline_database(TINY, params, hessians=hess, kind=kind)
+            uni = uniform_assignment(TINY, tab, t)
+            parts.append(
+                f"{kind[:3]}={loss(apply_assignment(TINY, params, bdb, uni)):.4f}")
+        detail.append(f"{t}x({' '.join(parts)})")
+    row("table2_oneshot", us, " ".join(detail))
+    _STATE["oneshot"] = res
+
+
+def bench_table4_calibration():
+    params, _ = trained_model()
+    out = []
+    for n in [4, 16, 64, 256]:
+        calib = calibration_batches(TINY, n, 64, batch=8)
+        t0 = time.perf_counter()
+        res = oneshot_prune(TINY, params, calib, ENV, targets=[2.0],
+                            search_steps=10, eval_with_loss=False, seed=1)
+        out.append(f"{n}:{res.variants[2.0].calib_loss:.4f}")
+    row("table4_calibration", 0.0, " ".join(out))
+
+
+def bench_table1_throughput_vs_latency():
+    """§4.2 depth-vs-width: the throughput env prunes width; the latency
+    env must drop whole modules (depth) to win."""
+    params, _ = trained_model()
+    calib = _STATE["calib"]
+    envs = {
+        "throughput": InferenceEnv(batch=16, seq=1024, mode="prefill"),
+        "latency": InferenceEnv(batch=1, seq=64, mode="decode"),
+    }
+    detail = []
+    for name, env in envs.items():
+        res = oneshot_prune(TINY, params, calib, env, targets=[2.5],
+                            search_steps=40, seed=2)
+        a = res.variants[2.5].assignment
+        mods = {m.name: m for m in registry(TINY)}
+        dropped = sum(1 for k, v in a.items()
+                      if v == mods[k].n_structures)
+        kept_frac = np.mean([1 - v / mods[k].n_structures
+                             for k, v in a.items() if "ffn" in k])
+        detail.append(f"{name}: dropped_modules={dropped} "
+                      f"ffn_width_kept={kept_frac:.2f} "
+                      f"loss={res.variants[2.5].calib_loss:.4f}")
+    row("table1_thr_vs_lat", 0.0, " | ".join(detail))
+
+
+def bench_table8_speedup_guarantee():
+    """Appendix F: target vs ACHIEVED (wall-clock measured) speedup of the
+    shrunk models, using the measured-on-CPU latency table."""
+    params, _ = trained_model()
+    calib = _STATE["calib"]
+    env = InferenceEnv(batch=8, seq=64, mode="prefill")
+    res = oneshot_prune(TINY, params, calib, env, targets=[1.5, 2.0],
+                        latency_backend="measure", search_steps=20, seed=3)
+    tokens = calib[0]["tokens"]
+    f_dense = jax.jit(lambda t: forward(TINY, params, t)["logits"])
+    t_dense = _timeit(f_dense, tokens, reps=5)
+    detail = []
+    for t, v in res.variants.items():
+        pm = shrink(TINY, v.params, res.db, v.assignment)
+        f_p = jax.jit(lambda tk, _pm=pm: forward_pruned(_pm, tk))
+        t_p = _timeit(f_p, tokens, reps=5)
+        achieved = t_dense / t_p
+        dev = (achieved - t) / t * 100
+        detail.append(f"target={t}x measured={achieved:.2f}x "
+                      f"dev={dev:+.1f}%")
+    row("table8_guarantee", t_dense, " | ".join(detail))
+
+
+def bench_fig5_scaling_law():
+    params, _ = trained_model()
+    calib = _STATE["calib"]
+    # measured backend: width scales CPU runtime, so deep targets stay
+    # feasible (the analytic table's unprunable base caps tiny models ~4x)
+    targets = [1.5, 2.0, 3.0, 4.0, 6.0]
+    res = oneshot_prune(TINY, params, calib,
+                        InferenceEnv(batch=8, seq=64, mode="prefill"),
+                        targets=targets, latency_backend="measure",
+                        search_steps=15, seed=4)
+    sp = np.array([res.variants[t].speedup for t in targets])
+    ls = np.array([res.variants[t].calib_loss for t in targets])
+    slope, intercept = np.polyfit(sp, ls, 1)
+    row("fig5_scaling_law", 0.0,
+        f"loss~{intercept:.3f}+{slope:.4f}*speedup  "
+        + " ".join(f"{t}x:{l:.3f}" for t, l in zip(targets, ls)))
+
+
+def bench_fig2_gradual():
+    params, _ = trained_model()
+    calib = _STATE["calib"]
+    data = synthetic_stream(TINY, 16, 64, seed=21)
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2, total_steps=15,
+                       distill_logit=1.0, distill_token=0.5)
+    t0 = time.perf_counter()
+    variants = gradual_prune(TINY, params, ENV, [1.5, 2.0], data, calib,
+                             tcfg=tcfg, finetune_steps=15, search_steps=10,
+                             ckpt_dir="/tmp/bench_gradual")
+    us = (time.perf_counter() - t0) * 1e6
+    detail = " | ".join(
+        f"{v.target}x loss {v.loss_before_ft:.4f}->{v.loss_after_ft:.4f} "
+        f"params={v.pruned.encoder_params()/1e3:.0f}k" for v in variants)
+    row("fig2_gradual", us, detail)
+
+
+def bench_kernels():
+    from repro.kernels import ops, ref
+    k = jax.random.key(0)
+    q = jax.random.normal(k, (2, 256, 8, 64), jnp.float32)
+    kv = jax.random.normal(k, (2, 256, 2, 64), jnp.float32)
+    us = _timeit(lambda: ops.flash_attention(q, kv, kv, interpret=True))
+    row("kernel_flash_attention", us, "interpret-mode, vs ref in tests")
+    x = jax.random.normal(k, (2048, 256), jnp.float32)
+    us = _timeit(lambda: ops.hessian_accum(x, interpret=True))
+    err = float(jnp.max(jnp.abs(ops.hessian_accum(x, interpret=True)
+                                - ref.hessian_ref(x))))
+    row("kernel_hessian_accum", us, f"maxerr={err:.1e}")
+    xs = jax.random.normal(k, (1, 128, 4, 32), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k, (1, 128, 4)))
+    A = -jnp.exp(jax.random.normal(k, (4,)) * 0.3)
+    B = jax.random.normal(k, (1, 128, 16)) * 0.5
+    us = _timeit(lambda: ops.ssd_chunked_kernel(xs, dt, A, B, B, chunk=64,
+                                                interpret=True)[0])
+    row("kernel_ssd_scan", us, "interpret-mode, vs recurrence in tests")
+
+
+def bench_roofline():
+    files = sorted(glob.glob(os.path.join(
+        os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
+    if not files:
+        row("roofline", 0.0, "no dry-run results; run repro.launch.dryrun")
+        return
+    ok = fail = 0
+    worst = (None, 1.0)
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            fail += 1
+            continue
+        ok += 1
+        if rec["mfu"] < worst[1]:
+            worst = (os.path.basename(f), rec["mfu"])
+    row("roofline_cells", 0.0,
+        f"ok={ok} fail={fail} worst_mfu={worst[1]:.4f}@{worst[0]}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    trained_model()
+    bench_table7_latency_table()
+    bench_table3_mlp_speedups()
+    bench_table2_oneshot()
+    bench_table4_calibration()
+    bench_table1_throughput_vs_latency()
+    bench_table8_speedup_guarantee()
+    bench_fig5_scaling_law()
+    bench_fig2_gradual()
+    bench_kernels()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

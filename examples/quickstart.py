@@ -1,0 +1,59 @@
+"""Quickstart: one-shot ZipLM pruning of a small GPT2-style model.
+
+Trains a tiny model on the synthetic stream, then produces a family of
+pruned models with guaranteed speedups for a chosen inference environment.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import GPT2_SMALL
+from repro.configs.base import TrainConfig
+from repro.core.oneshot import oneshot_prune
+from repro.core.shrink import shrink
+from repro.data import calibration_batches, synthetic_stream
+from repro.models import model_init
+from repro.runtime.costmodel import InferenceEnv
+from repro.train.train_step import make_train_state, make_train_step
+
+
+def main():
+    cfg = GPT2_SMALL.replace(name="gpt2-tiny", num_layers=4, d_model=96,
+                             d_ff=384, num_heads=6, num_kv_heads=6,
+                             head_dim=16, vocab_size=384, dtype="float32")
+    print(f"model: {cfg.name}  params={cfg.num_params()/1e6:.2f}M")
+
+    # 1) train briefly so pruning has signal to preserve
+    params, _ = model_init(cfg, jax.random.key(0))
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10, total_steps=150)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state = make_train_state(cfg, params, tcfg)
+    data = synthetic_stream(cfg, 16, 64, seed=7)
+    for i in range(150):
+        state, m = step(state, next(data))
+        if i % 50 == 0:
+            print(f"  step {i:4d} loss {float(m['loss']):.4f}")
+    params = state.params
+
+    # 2) inference specification (paper §3.2): batch, seq, device
+    env = InferenceEnv(batch=16, seq=128, mode="prefill")
+    calib = calibration_batches(cfg, 32, 64, batch=8)
+
+    # 3) one run -> the whole family, each with a speedup guarantee
+    res = oneshot_prune(cfg, params, calib, env, targets=[1.5, 2.0, 3.0],
+                        search_steps=40, verbose=False)
+    print(f"\ndense loss {res.dense_loss:.4f}")
+    for t, v in sorted(res.variants.items()):
+        pm = shrink(cfg, v.params, res.db, v.assignment)
+        print(f"  target {t:>4}x -> achieved {v.speedup:.2f}x  "
+              f"loss {v.calib_loss:.4f}  "
+              f"stack params {pm.encoder_params()/1e3:.0f}k")
+
+
+if __name__ == "__main__":
+    main()

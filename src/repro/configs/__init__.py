@@ -1,0 +1,82 @@
+"""Architecture config registry.
+
+One module per assigned architecture (exact public-literature configs) plus
+the paper's own models (BERT-base/large, GPT2-small) and reduced smoke
+variants. Select with ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+from .base import (LM_SHAPES, MULTI_POD, SINGLE_POD, DECODE_32K, LONG_500K,
+                   PREFILL_32K, TRAIN_4K, MeshConfig, ModelConfig, ShapeConfig,
+                   TrainConfig)
+from .bert import BERT_BASE, BERT_LARGE
+from .dbrx_132b import CONFIG as DBRX_132B
+from .gpt2 import GPT2_SMALL
+from .h2o_danube_1p8b import CONFIG as H2O_DANUBE_1P8B
+from .hymba_1p5b import CONFIG as HYMBA_1P5B
+from .internlm2_20b import CONFIG as INTERNLM2_20B
+from .llama32_vision_11b import CONFIG as LLAMA32_VISION_11B
+from .mamba2_2p7b import CONFIG as MAMBA2_2P7B
+from .phi35_moe_42b import CONFIG as PHI35_MOE
+from .qwen15_110b import CONFIG as QWEN15_110B
+from .qwen2_72b import CONFIG as QWEN2_72B
+from .whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+
+ARCHS = {
+    c.name: c for c in [
+        DBRX_132B, PHI35_MOE, MAMBA2_2P7B, LLAMA32_VISION_11B,
+        H2O_DANUBE_1P8B, QWEN15_110B, QWEN2_72B, INTERNLM2_20B,
+        WHISPER_LARGE_V3, HYMBA_1P5B, BERT_BASE, BERT_LARGE, GPT2_SMALL,
+    ]
+}
+
+ASSIGNED = [
+    "dbrx-132b", "phi3.5-moe-42b-a6.6b", "mamba2-2.7b",
+    "llama-3.2-vision-11b", "h2o-danube-1.8b", "qwen1.5-110b", "qwen2-72b",
+    "internlm2-20b", "whisper-large-v3", "hymba-1.5b",
+]
+
+# archs with sub-quadratic attention for which long_500k is runnable
+SUBQUADRATIC = {"mamba2-2.7b", "hymba-1.5b", "h2o-danube-1.8b"}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    c = get_config(name)
+    kw = dict(
+        name=c.name + "-smoke", num_layers=2, d_model=128,
+        d_ff=256 if c.d_ff else 0, vocab_size=512, max_position=4096,
+    )
+    if c.attention != "none":
+        kw.update(num_heads=4, num_kv_heads=max(1, 4 // max(c.q_per_kv, 1)),
+                  head_dim=32)
+        if c.num_kv_heads == c.num_heads:
+            kw["num_kv_heads"] = 4
+    if c.num_experts:
+        kw.update(num_experts=4, num_experts_per_tok=min(2, c.num_experts_per_tok))
+    if c.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=32,
+                  ssm_expand=max(1, c.ssm_expand))
+    if c.encoder_decoder:
+        kw.update(num_encoder_layers=2, num_frontend_tokens=16, frontend_dim=128)
+    if c.cross_attn_every:
+        kw.update(cross_attn_every=2, num_frontend_tokens=16, frontend_dim=128)
+    if c.attention == "sliding_window":
+        kw.update(window_size=64)
+    return c.replace(**kw)
+
+
+def shapes_for(name: str):
+    """The shape cells assigned to an arch (with documented skips)."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and name not in SUBQUADRATIC:
+            continue  # full-attention arch: skip per DESIGN.md §4
+        out.append(s)
+    return out

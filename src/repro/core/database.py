@@ -1,0 +1,85 @@
+"""Per-layer pruning database (paper §3.2): for every prunable module, the
+ZipLM-updated weight snapshot, squared error, and SPDY prior at each
+sparsity level — produced in a single run per module, exploiting the
+one-structure-at-a-time nature of Algorithm 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .obs import build_hessian, module_drop_error, prune_structured
+from .structures import (PrunableModule, get_matrix, level_grid, registry,
+                         set_matrix)
+
+
+@dataclass
+class ModuleDB:
+    mod: PrunableModule
+    levels: np.ndarray       # structures removed, ascending; last = full drop
+    snapshots: np.ndarray    # (n_levels, d_in, d_out) float16 (host)
+    errors: np.ndarray       # cumulative sq. error per level (raw-H scale)
+    priors: np.ndarray       # p_s in [0, 1]; 1.0 = module dropped
+    base_norm: float
+    order: np.ndarray = None  # structure removed at step i (shrink needs it)
+
+    def weights_at(self, removed: int) -> np.ndarray:
+        i = int(np.searchsorted(self.levels, removed))
+        return self.snapshots[i]
+
+    def kept_structures(self, removed: int) -> np.ndarray:
+        """Sorted indices of structures remaining at a level."""
+        gone = set(np.asarray(self.order[:removed]).tolist())
+        return np.asarray([g for g in range(self.mod.n_structures)
+                           if g not in gone])
+
+
+def build_module_db(cfg, params, mod: PrunableModule, h_raw,
+                    damp: float = 1e-4) -> ModuleDB:
+    W = get_matrix(cfg, params, mod).astype(jnp.float32)
+    H = build_hessian(h_raw, damp)
+    Hinv = jnp.linalg.inv(H)
+    levels = level_grid(mod)
+    n_remove = max(levels)
+    res = prune_structured(W, Hinv, group_size=mod.group_size,
+                           n_remove=n_remove, levels=tuple(levels))
+    base = float(module_drop_error(W, h_raw))
+    errs = np.asarray(res.errors, np.float64) / 2.0  # H had the paper's 2x
+    errs[-1] = base if levels[-1] == mod.n_structures else errs[-1]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        priors = np.sqrt(np.maximum(errs, 0.0) / max(base, 1e-30))
+    priors = np.clip(np.nan_to_num(priors, nan=1.0), 0.0, 1.0)
+    return ModuleDB(mod=mod, levels=np.asarray(levels),
+                    snapshots=np.asarray(res.snapshots, np.float16),
+                    errors=errs, priors=priors, base_norm=base,
+                    order=np.asarray(res.order))
+
+
+def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
+                   damp: float = 1e-4, verbose: bool = False
+                   ) -> Dict[str, ModuleDB]:
+    db: Dict[str, ModuleDB] = {}
+    for mod in registry(cfg):
+        db[mod.name] = build_module_db(cfg, params, mod, hessians[mod.name],
+                                       damp)
+        if verbose:
+            p = db[mod.name].priors
+            print(f"  db {mod.name}: levels={len(p)} "
+                  f"p[1]={p[min(1, len(p)-1)]:.4f} p[-2]={p[-2]:.4f}")
+    return db
+
+
+def apply_assignment(cfg, params, db: Dict[str, ModuleDB],
+                     assignment: Dict[str, int]):
+    """Stitch the database snapshots for a per-module level assignment into
+    the parameter tree (masked model; shrink materializes real speedup)."""
+    new = params
+    for name, removed in assignment.items():
+        mdb = db[name]
+        w = jnp.asarray(mdb.weights_at(removed), jnp.float32)
+        new = set_matrix(cfg, new, mdb.mod, w)
+    return new

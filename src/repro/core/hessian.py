@@ -1,0 +1,59 @@
+"""Calibration: run the model over calibration batches with capture mode on
+and accumulate per-module Hessians ``X^T X`` (fp32, streamed over batches).
+
+The inner accumulation is the Pallas ``hessian_accum`` kernel's jnp twin;
+``use_kernel=True`` routes through the kernel (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import forward
+from .structures import PrunableModule, get_capture, registry
+
+
+def xtx(x: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
+        use_kernel: bool = False) -> jnp.ndarray:
+    """X^T X for X: (N, d); optionally mask invalid rows."""
+    x = x.astype(jnp.float32)
+    if valid is not None:
+        x = x * valid[:, None].astype(jnp.float32)
+    if use_kernel:
+        from ..kernels import ops as kops
+        return kops.hessian_accum(x)
+    return x.T @ x
+
+
+def collect_hessians(cfg, params, batches: List[Dict], *,
+                     use_kernel: bool = False) -> Dict[str, jnp.ndarray]:
+    """Returns {module_name: H_raw = sum X^T X} over calibration batches."""
+    mods = registry(cfg)
+    hessians: Dict[str, jnp.ndarray] = {}
+    n_samples: Dict[str, float] = {}
+
+    @jax.jit
+    def captured(params, tokens, frontend):
+        out = forward(cfg, params, tokens, frontend_embeds=frontend,
+                      capture=True)
+        return out["captures"]
+
+    for batch in batches:
+        caps = captured(params, batch["tokens"], batch.get("frontend"))
+        for mod in mods:
+            x, valid = get_capture(caps, mod)
+            h = xtx(x, valid, use_kernel=use_kernel)
+            if mod.name in hessians:
+                hessians[mod.name] = hessians[mod.name] + h
+            else:
+                hessians[mod.name] = h
+            n = (float(x.shape[0]) if valid is None
+                 else float(jnp.sum(valid)))
+            n_samples[mod.name] = n_samples.get(mod.name, 0.0) + n
+
+    # normalize by sample count (keeps damping scale-invariant)
+    for k in hessians:
+        hessians[k] = hessians[k] / max(n_samples[k], 1.0)
+    return hessians

@@ -1,0 +1,197 @@
+"""Latency tables (paper §3.2, Appendix E).
+
+For the target inference environment, record the runtime of each prunable
+module at every sparsity level: attention with 0..N-1 head-groups pruned,
+FC at intermediate sizes ceil(d_ff * 0.9^i). Two backends:
+
+* ``costmodel`` — analytic TPU-v5e roofline (DESIGN.md §3), used when the
+  target device is a TPU we cannot measure from this container.
+* ``measure``  — wall-clock timing of the jitted module on the *current*
+  device (the paper's own procedure; used on CPU in tests/benchmarks).
+
+``runtime_of`` then maps any per-layer level assignment to end-to-end
+runtime, which is what gives ZipLM its speedup *guarantee*.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime import costmodel as cm
+from .structures import PrunableModule, level_grid, registry
+
+
+@dataclass
+class LatencyTable:
+    env: cm.InferenceEnv
+    # kind -> (levels, seconds) aligned arrays; levels = structures removed
+    grids: Dict[str, np.ndarray] = field(default_factory=dict)
+    times: Dict[str, np.ndarray] = field(default_factory=dict)
+    base: float = 0.0
+
+    def module_time(self, kind: str, removed: int) -> float:
+        g, t = self.grids[kind], self.times[kind]
+        return float(np.interp(removed, g, t))
+
+    def level_times(self, mod: PrunableModule) -> np.ndarray:
+        g = np.asarray(level_grid(mod))
+        return np.interp(g, self.grids[mod.kind], self.times[mod.kind])
+
+    def runtime_of(self, assignment: Dict[str, int], mods=None,
+                   cfg=None) -> float:
+        """assignment: module name -> structures removed."""
+        mods = mods or []
+        by_name = {m.name: m for m in mods}
+        t = self.base
+        for name, removed in assignment.items():
+            t += self.module_time(by_name[name].kind, removed)
+        return t
+
+    def dense_runtime(self, mods) -> float:
+        return self.base + sum(self.module_time(m.kind, 0) for m in mods)
+
+
+def _kinds_for(cfg) -> List[str]:
+    kinds = []
+    if cfg.attention != "none" and cfg.family != "ssm":
+        kinds.append("attn")
+    if cfg.ssm_state:
+        kinds.append("ssm")
+    if cfg.num_experts:
+        kinds.append("moe")
+    elif cfg.d_ff:
+        kinds.append("ffn")
+    return kinds
+
+
+def _grid_for(cfg, kind: str) -> np.ndarray:
+    if kind == "attn":
+        n = cfg.num_kv_heads
+        return np.arange(n + 1)
+    if kind == "ssm":
+        return np.arange(cfg.ssm_heads + 1)
+    n = cfg.d_ff
+    sizes = sorted({int(np.ceil(n * 0.9 ** i)) for i in range(43)} | {0},
+                   reverse=True)
+    return np.asarray([n - s for s in sizes])
+
+
+def build_costmodel_table(cfg, env: cm.InferenceEnv) -> LatencyTable:
+    tab = LatencyTable(env=env)
+    for kind in _kinds_for(cfg):
+        grid = _grid_for(cfg, kind)
+        ts = []
+        for removed in grid:
+            if kind == "attn":
+                ts.append(cm.attn_time(cfg, env, cfg.num_kv_heads - removed))
+            elif kind == "ssm":
+                ts.append(cm.ssm_time(cfg, env, cfg.ssm_heads - removed))
+            elif kind == "moe":
+                ts.append(cm.moe_expert_time(cfg, env, cfg.d_ff - removed))
+            else:
+                ts.append(cm.ffn_time(cfg, env, cfg.d_ff - removed))
+        tab.grids[kind] = grid
+        tab.times[kind] = np.asarray(ts)
+    tab.base = cm.base_time(cfg, env)
+    return tab
+
+
+# ----------------------------------------------------------------------
+# measured backend (paper's procedure, on the current device)
+# ----------------------------------------------------------------------
+
+def _time_fn(fn, *args, reps: int = 5) -> float:
+    jax.block_until_ready(fn(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def build_measured_table(cfg, env: cm.InferenceEnv, *,
+                         grid_subsample: int = 4, reps: int = 5
+                         ) -> LatencyTable:
+    """Measure real module runtimes on the current device (CPU here).
+
+    Subsamples the level grid (interp fills gaps) to keep build time sane.
+    """
+    tab = LatencyTable(env=env)
+    dt = jnp.dtype(cfg.dtype)
+    t_tok = env.tokens
+    key = jax.random.key(0)
+
+    for kind in _kinds_for(cfg):
+        full_grid = _grid_for(cfg, kind)
+        grid = np.unique(np.concatenate(
+            [full_grid[::grid_subsample], full_grid[-1:]]))
+        ts = []
+        for removed in grid:
+            if kind == "attn":
+                groups = int(cfg.num_kv_heads - removed)
+                hq = groups * cfg.q_per_kv
+                dh = cfg.resolved_head_dim
+                if groups == 0:
+                    ts.append(0.0)
+                    continue
+                x = jax.random.normal(key, (t_tok, cfg.d_model), dt)
+                wq = jnp.zeros((cfg.d_model, hq * dh), dt)
+                wk = jnp.zeros((cfg.d_model, groups * dh), dt)
+                wo = jnp.zeros((hq * dh, cfg.d_model), dt)
+
+                @jax.jit
+                def attn_mod(x, wq, wk, wo, _s=env.seq, _hq=hq, _dh=dh,
+                             _g=groups, _mode=env.mode, _b=env.batch):
+                    q = (x @ wq).reshape(_b, -1, _hq, _dh)
+                    k = (x @ wk).reshape(_b, -1, _g, _dh)
+                    v = k
+                    kr = jnp.repeat(k, _hq // _g, 2)
+                    vr = jnp.repeat(v, _hq // _g, 2)
+                    lg = jnp.einsum("bqhd,bkhd->bhqk", q, kr)
+                    p = jax.nn.softmax(lg.astype(jnp.float32), -1).astype(dt)
+                    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+                    return (o.reshape(x.shape[0], -1) @ wo)
+
+                ts.append(_time_fn(attn_mod, x, wq, wk, wo, reps=reps))
+            else:
+                if kind == "ssm":
+                    f_live = int(cfg.ssm_heads - removed) * cfg.ssm_head_dim
+                else:
+                    f_live = int(cfg.d_ff - removed)
+                if f_live <= 0:
+                    ts.append(0.0)
+                    continue
+                n_tok = t_tok if kind != "moe" else max(
+                    8, int(t_tok * cfg.num_experts_per_tok
+                           / cfg.num_experts * 1.25))
+                x = jax.random.normal(key, (n_tok, cfg.d_model), dt)
+                w1 = jnp.zeros((cfg.d_model, f_live), dt)
+                w2 = jnp.zeros((f_live, cfg.d_model), dt)
+
+                @jax.jit
+                def ffn_mod(x, w1, w2):
+                    return jax.nn.silu(x @ w1) @ w2
+
+                ts.append(_time_fn(ffn_mod, x, w1, w2, reps=reps))
+        tab.grids[kind] = grid
+        tab.times[kind] = np.asarray(ts)
+
+    # base: embedding lookup + logits head
+    x = jax.random.normal(key, (t_tok, cfg.d_model), dt)
+    wv = jnp.zeros((cfg.d_model, cfg.vocab_size), dt)
+    tab.base = _time_fn(jax.jit(lambda x, w: x @ w), x, wv, reps=reps)
+    return tab
+
+
+def build_table(cfg, env: cm.InferenceEnv, backend: str = "costmodel",
+                **kw) -> LatencyTable:
+    if backend == "costmodel":
+        return build_costmodel_table(cfg, env)
+    if backend == "measure":
+        return build_measured_table(cfg, env, **kw)
+    raise ValueError(f"unknown latency backend {backend!r}")

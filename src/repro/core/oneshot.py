@@ -1,0 +1,90 @@
+"""Post-training / one-shot ZipLM pruning (paper §4.3): calibrate →
+Hessians → database → structured-SPDY per speedup target → stitched models.
+
+A single run produces the whole family of compressed models, one per
+speedup target, each with a runtime guarantee in the given environment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import loss_fn
+from ..runtime.costmodel import InferenceEnv
+from .database import ModuleDB, apply_assignment, build_database
+from .hessian import collect_hessians
+from .latency import LatencyTable, build_table
+from .spdy import SearchResult, search
+from .structures import registry
+
+
+@dataclass
+class PrunedVariant:
+    target_speedup: float
+    params: dict
+    assignment: Dict[str, int]
+    runtime: float
+    speedup: float
+    calib_loss: float
+    search: SearchResult
+
+
+@dataclass
+class OneShotResult:
+    variants: Dict[float, PrunedVariant]
+    table: LatencyTable
+    db: Dict[str, ModuleDB]
+    dense_runtime: float
+    dense_loss: float
+
+
+def calib_loss_fn(cfg, batches):
+    @jax.jit
+    def _loss(params):
+        losses = [loss_fn(cfg, params, b)["loss"] for b in batches]
+        return jnp.mean(jnp.stack(losses))
+
+    return lambda params: float(_loss(params))
+
+
+def oneshot_prune(cfg, params, calib_batches: List[dict],
+                  env: InferenceEnv, targets: Sequence[float], *,
+                  latency_backend: str = "costmodel",
+                  search_steps: int = 200, eval_with_loss: bool = True,
+                  eval_batches: Optional[List[dict]] = None,
+                  damp: float = 1e-4, use_kernel: bool = False,
+                  seed: int = 0, verbose: bool = False) -> OneShotResult:
+    hessians = collect_hessians(cfg, params, calib_batches,
+                                use_kernel=use_kernel)
+    table = build_table(cfg, env, backend=latency_backend)
+    db = build_database(cfg, params, hessians, damp=damp, verbose=verbose)
+    mods = registry(cfg)
+    dense_rt = table.dense_runtime(mods)
+
+    loss_eval = calib_loss_fn(cfg, eval_batches or calib_batches[:1])
+    dense_loss = loss_eval(params)
+
+    eval_fn = None
+    if eval_with_loss:
+        def eval_fn(assignment):
+            return loss_eval(apply_assignment(cfg, params, db, assignment))
+
+    variants: Dict[float, PrunedVariant] = {}
+    for t in targets:
+        res = search(db, table, t, steps=search_steps, eval_fn=eval_fn,
+                     seed=seed, verbose=verbose)
+        pruned = apply_assignment(cfg, params, db, res.assignment)
+        variants[t] = PrunedVariant(
+            target_speedup=t, params=pruned, assignment=res.assignment,
+            runtime=res.runtime, speedup=res.speedup,
+            calib_loss=loss_eval(pruned), search=res)
+        if verbose:
+            print(f"target {t}x -> achieved {res.speedup:.2f}x, "
+                  f"loss {variants[t].calib_loss:.4f} "
+                  f"(dense {dense_loss:.4f})")
+    return OneShotResult(variants=variants, table=table, db=db,
+                         dense_runtime=dense_rt, dense_loss=dense_loss)

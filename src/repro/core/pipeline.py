@@ -1,0 +1,109 @@
+"""Gradual structured pruning (paper §4.1): for each speedup target in
+ascending order, ZipLM-prune the *current* model to the target, then
+finetune with layer-wise token distillation against the dense teacher,
+and export. One run, one set of hyper-parameters, a whole model family —
+each member meeting its runtime target by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import TrainConfig
+from ..models.pruned import PrunedModel
+from ..train.trainer import Trainer
+from .database import apply_assignment, build_database
+from .hessian import collect_hessians
+from .latency import build_table
+from .oneshot import calib_loss_fn
+from .shrink import shrink
+from .spdy import search
+from .structures import get_matrix, registry
+
+
+def masks_from_assignment(cfg, params, db, assignment):
+    """Params-shaped {0,1} mask pytree pinning pruned structures to zero
+    during finetuning (gradients would otherwise regrow them)."""
+    masks = jax.tree.map(lambda p: jnp.ones(p.shape, jnp.float32), params)
+    for name, removed in assignment.items():
+        mdb = db[name]
+        kept = mdb.kept_structures(removed)
+        gs = mdb.mod.group_size
+        row_mask = np.zeros(mdb.mod.d_in, np.float32)
+        for g in kept:
+            row_mask[g * gs:(g + 1) * gs] = 1.0
+        mod = mdb.mod
+        layers = masks["layers"]
+        rm = jnp.asarray(row_mask)[:, None]
+        if mod.kind == "attn":
+            layers["attn"]["wo"] = layers["attn"]["wo"].at[mod.layer].mul(rm)
+        elif mod.kind == "ssm":
+            layers["ssm"]["out_proj"] = \
+                layers["ssm"]["out_proj"].at[mod.layer].mul(rm)
+        elif mod.kind == "moe":
+            layers["moe"]["wd"] = \
+                layers["moe"]["wd"].at[mod.layer, mod.expert].mul(rm)
+        else:
+            layers["ffn"]["wd"] = layers["ffn"]["wd"].at[mod.layer].mul(rm)
+    return masks
+
+
+@dataclass
+class GradualVariant:
+    target: float
+    achieved: float
+    assignment: Dict[str, int]
+    params: dict
+    pruned: PrunedModel
+    loss_before_ft: float
+    loss_after_ft: float
+
+
+def gradual_prune(cfg, params, env, targets: Sequence[float],
+                  data: Iterator[Dict], calib_batches: List[Dict], *,
+                  tcfg: Optional[TrainConfig] = None,
+                  finetune_steps: int = 50, search_steps: int = 50,
+                  latency_backend: str = "costmodel", ckpt_dir: str = None,
+                  verbose: bool = False) -> List[GradualVariant]:
+    tcfg = tcfg or TrainConfig(learning_rate=8e-5, warmup_steps=5,
+                               total_steps=finetune_steps,
+                               distill_logit=1.0, distill_token=0.5)
+    teacher = jax.tree.map(lambda a: a, params)  # dense teacher
+    table = build_table(cfg, env, backend=latency_backend)
+    loss_eval = calib_loss_fn(cfg, calib_batches[:1])
+
+    current = params
+    out: List[GradualVariant] = []
+    for i, target in enumerate(sorted(targets)):
+        # re-calibrate on the *current* model (Hessians drift as we prune)
+        hessians = collect_hessians(cfg, current, calib_batches)
+        db = build_database(cfg, current, hessians)
+        res = search(db, table, target, steps=search_steps,
+                     eval_fn=lambda a: loss_eval(
+                         apply_assignment(cfg, current, db, a)))
+        masked = apply_assignment(cfg, current, db, res.assignment)
+        loss_before = loss_eval(masked)
+
+        masks = masks_from_assignment(cfg, masked, db, res.assignment)
+        trainer = Trainer(cfg, tcfg, ckpt_dir=(ckpt_dir or "/tmp/ziplm_ckpt")
+                          + f"/t{target}", teacher_params=teacher,
+                          masks=masks, ckpt_every=max(finetune_steps, 1))
+        state = trainer.init_or_restore(masked)
+        state = trainer.fit(state, data, steps=finetune_steps)
+        current = state.params
+        loss_after = loss_eval(current)
+
+        pm = shrink(cfg, current, db, res.assignment)
+        out.append(GradualVariant(
+            target=target, achieved=res.speedup, assignment=res.assignment,
+            params=current, pruned=pm, loss_before_ft=loss_before,
+            loss_after_ft=loss_after))
+        if verbose:
+            print(f"[gradual] {target}x -> {res.speedup:.2f}x  "
+                  f"loss {loss_before:.4f} -> {loss_after:.4f}  "
+                  f"stack params {pm.encoder_params()/1e6:.2f}M")
+    return out

@@ -1,0 +1,157 @@
+"""Shrink: materialize a ZipLM assignment as a physically smaller model.
+
+Row-structures zeroed in the out-side matrix make twin weights dead:
+  * attn:  removed KV groups -> slice q/k/v projection columns + wo rows
+  * ffn:   removed FC2 rows  -> slice wg/wu (or wi/bi) columns + wd rows
+  * moe:   per-expert as ffn; fully dropped experts leave the router
+  * ssm:   removed SSD heads -> slice in_proj (z/x/dt), conv, A/D/dt_bias,
+           gated-norm and out_proj rows
+
+The shrunk model must produce the *same outputs* as the masked model
+(verified by tests/test_shrink.py) — the compute simply gets smaller.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.pruned import PrunedLayer, PrunedModel
+from .database import ModuleDB
+
+
+def _rows_for_groups(kept: np.ndarray, gs: int) -> np.ndarray:
+    return (kept[:, None] * gs + np.arange(gs)[None, :]).reshape(-1)
+
+
+def _np(a):
+    return np.asarray(a)
+
+
+def shrink(cfg, params, db: Dict[str, ModuleDB],
+           assignment: Dict[str, int]) -> PrunedModel:
+    dh = cfg.resolved_head_dim
+    qpk = cfg.q_per_kv
+    layers_p = params["layers"]
+    out_layers: List[PrunedLayer] = []
+
+    for l in range(cfg.num_layers):
+        lcfg = PrunedLayer()
+        lp: Dict = {}
+
+        # ---- attention ----
+        aname = f"L{l}.attn"
+        if aname in assignment:
+            mdb = db[aname]
+            removed = assignment[aname]
+            kept = mdb.kept_structures(removed)          # kv group ids
+            lcfg.kv_groups = len(kept)
+            if len(kept) > 0:
+                wo_snap = _np(mdb.weights_at(removed)).astype(np.float32)
+                q_rows = _rows_for_groups(kept, qpk * dh)
+                kv_rows = _rows_for_groups(kept, dh)
+                ap = {k: _np(v[l]) for k, v in layers_p["attn"].items()}
+                new_attn = {
+                    "wq": jnp.asarray(ap["wq"][:, q_rows]),
+                    "wk": jnp.asarray(ap["wk"][:, kv_rows]),
+                    "wv": jnp.asarray(ap["wv"][:, kv_rows]),
+                    "wo": jnp.asarray(wo_snap[q_rows, :]),
+                }
+                if cfg.qkv_bias:
+                    new_attn["bq"] = jnp.asarray(ap["bq"][q_rows])
+                    new_attn["bk"] = jnp.asarray(ap["bk"][kv_rows])
+                    new_attn["bv"] = jnp.asarray(ap["bv"][kv_rows])
+                lp["attn"] = new_attn
+                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
+
+        # ---- ssm ----
+        sname = f"L{l}.ssm"
+        if sname in assignment:
+            mdb = db[sname]
+            removed = assignment[sname]
+            kept = mdb.kept_structures(removed)          # ssd head ids
+            lcfg.ssm_heads = len(kept)
+            if len(kept) > 0:
+                hp = cfg.ssm_head_dim
+                rows = _rows_for_groups(kept, hp)        # within d_inner
+                sp = {k: _np(v[l]) for k, v in layers_p["ssm"].items()}
+                snap = _np(mdb.weights_at(removed)).astype(np.float32)
+                lp["ssm"] = {
+                    "in_z": jnp.asarray(sp["in_z"][:, rows]),
+                    "in_x": jnp.asarray(sp["in_x"][:, rows]),
+                    "in_bc": jnp.asarray(sp["in_bc"]),
+                    "in_dt": jnp.asarray(sp["in_dt"][:, kept]),
+                    "conv_x": jnp.asarray(sp["conv_x"][:, rows]),
+                    "conv_x_b": jnp.asarray(sp["conv_x_b"][rows]),
+                    "conv_bc": jnp.asarray(sp["conv_bc"]),
+                    "conv_bc_b": jnp.asarray(sp["conv_bc_b"]),
+                    "A_log": jnp.asarray(sp["A_log"][kept]),
+                    "D": jnp.asarray(sp["D"][kept]),
+                    "dt_bias": jnp.asarray(sp["dt_bias"][kept]),
+                    "norm": jnp.asarray(sp["norm"][rows]),
+                    "out_proj": jnp.asarray(snap[rows, :]),
+                }
+                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
+
+        # ---- ffn ----
+        fname = f"L{l}.ffn"
+        if fname in assignment:
+            mdb = db[fname]
+            removed = assignment[fname]
+            kept = mdb.kept_structures(removed)
+            lcfg.d_ff = len(kept)
+            if len(kept) > 0:
+                fp = {k: _np(v[l]) for k, v in layers_p["ffn"].items()}
+                snap = _np(mdb.weights_at(removed)).astype(np.float32)
+                if "wg" in fp:
+                    lp["ffn"] = {
+                        "wg": jnp.asarray(fp["wg"][:, kept]),
+                        "wu": jnp.asarray(fp["wu"][:, kept]),
+                        "wd": jnp.asarray(snap[kept, :]),
+                    }
+                else:
+                    lp["ffn"] = {
+                        "wi": jnp.asarray(fp["wi"][:, kept]),
+                        "bi": jnp.asarray(fp["bi"][kept]),
+                        "wd": jnp.asarray(snap[kept, :]),
+                        "bd": jnp.asarray(fp["bd"]),
+                    }
+                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
+
+        # ---- moe ----
+        ename = f"L{l}.expert0"
+        if ename in assignment:
+            experts = []
+            router_cols = []
+            mp = layers_p["moe"]
+            for e in range(cfg.num_experts):
+                mdb = db[f"L{l}.expert{e}"]
+                removed = assignment[f"L{l}.expert{e}"]
+                kept = mdb.kept_structures(removed)
+                if len(kept) == 0:
+                    continue
+                snap = _np(mdb.weights_at(removed)).astype(np.float32)
+                experts.append({
+                    "wg": jnp.asarray(_np(mp["wg"][l, e])[:, kept]),
+                    "wu": jnp.asarray(_np(mp["wu"][l, e])[:, kept]),
+                    "wd": jnp.asarray(snap[kept, :]),
+                })
+                router_cols.append(e)
+                lcfg.expert_ff.append(len(kept))
+            if experts:
+                lp["moe"] = {
+                    "router": jnp.asarray(_np(mp["router"][l])[:, router_cols]),
+                    "experts": experts,
+                }
+                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
+
+        lcfg.params = lp
+        out_layers.append(lcfg)
+
+    globals_ = {"embed": params["embed"],
+                "final_norm": params["final_norm"]}
+    if params.get("head"):
+        globals_["head"] = params["head"]
+    return PrunedModel(cfg=cfg, layers=out_layers, globals_=globals_)

@@ -1,0 +1,133 @@
+"""Structure registry: which weight matrices are prunable, at what
+granularity, and how twin weights shrink with them.
+
+ZipLM's generalized structure = a group of *input features* (rows, in our
+``y = x @ W`` convention) of a projection whose output feeds the residual
+stream:
+
+  * attention:  ``W_o``  — one group per KV head (= q_per_kv query heads x
+    head_dim rows). For MHA (q_per_kv == 1) this is exactly the paper's
+    "d_head consecutive columns of the out-matrix"; for GQA we prune whole
+    KV groups so K/V projections shrink consistently (DESIGN.md §4).
+  * FFN:        ``W_down`` — single-row groups (paper's FC2 columns).
+  * MoE:        per-expert ``W_down`` — single-row groups per expert.
+  * SSD (Mamba-2): ``out_proj`` — one group per SSD head (head_dim rows).
+
+Pruning the whole module (all groups) = the paper's residual-module drop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PrunableModule:
+    name: str                 # "L{layer}.{kind}" or "L{layer}.expert{e}"
+    kind: str                 # attn | xattn | ffn | moe | ssm
+    layer: int
+    expert: int = -1          # >= 0 for per-expert modules
+    weight_key: str = ""      # leaf name of the out-side matrix ("wo"/"wd"/...)
+    capture_key: str = ""     # capture feeding this matrix
+    group_size: int = 1
+    n_structures: int = 0
+
+    @property
+    def d_in(self) -> int:
+        return self.group_size * self.n_structures
+
+
+def registry(cfg) -> List[PrunableModule]:
+    """Enumerate prunable modules for a model config."""
+    mods: List[PrunableModule] = []
+    dh = cfg.resolved_head_dim
+    for l in range(cfg.num_layers):
+        if cfg.attention != "none" and cfg.family != "ssm":
+            mods.append(PrunableModule(
+                name=f"L{l}.attn", kind="attn", layer=l, weight_key="wo",
+                capture_key="wo_in", group_size=cfg.q_per_kv * dh,
+                n_structures=cfg.num_kv_heads))
+        if cfg.ssm_state:
+            mods.append(PrunableModule(
+                name=f"L{l}.ssm", kind="ssm", layer=l, weight_key="out_proj",
+                capture_key="ssm_out_in", group_size=cfg.ssm_head_dim,
+                n_structures=cfg.ssm_heads))
+        if cfg.num_experts:
+            for e in range(cfg.num_experts):
+                mods.append(PrunableModule(
+                    name=f"L{l}.expert{e}", kind="moe", layer=l, expert=e,
+                    weight_key="wd", capture_key="wd_in", group_size=1,
+                    n_structures=cfg.d_ff))
+        elif cfg.d_ff:
+            mods.append(PrunableModule(
+                name=f"L{l}.ffn", kind="ffn", layer=l, weight_key="wd",
+                capture_key="wd_in", group_size=1, n_structures=cfg.d_ff))
+    return mods
+
+
+def get_matrix(cfg, params, mod: PrunableModule) -> jnp.ndarray:
+    """Extract the (d_in, d_out) out-side matrix for a prunable module."""
+    layers = params["layers"]
+    if mod.kind == "attn":
+        return layers["attn"]["wo"][mod.layer]
+    if mod.kind == "ssm":
+        return layers["ssm"]["out_proj"][mod.layer]
+    if mod.kind == "moe":
+        return layers["moe"]["wd"][mod.layer, mod.expert]
+    return layers["ffn"]["wd"][mod.layer]
+
+
+def set_matrix(cfg, params, mod: PrunableModule, w) -> Dict:
+    """Functionally replace the out-side matrix (returns new params tree)."""
+    params = jax.tree.map(lambda a: a, params)  # shallow-ish copy of dicts
+    layers = params["layers"]
+    if mod.kind == "attn":
+        layers["attn"]["wo"] = layers["attn"]["wo"].at[mod.layer].set(w)
+    elif mod.kind == "ssm":
+        layers["ssm"]["out_proj"] = \
+            layers["ssm"]["out_proj"].at[mod.layer].set(w)
+    elif mod.kind == "moe":
+        layers["moe"]["wd"] = \
+            layers["moe"]["wd"].at[mod.layer, mod.expert].set(w)
+    else:
+        layers["ffn"]["wd"] = layers["ffn"]["wd"].at[mod.layer].set(w)
+    return params
+
+
+def get_capture(captures: Dict, mod: PrunableModule):
+    """Pull the calibration inputs X for a module from forward captures.
+
+    Returns (X, valid) where X: (N, d_in) row-major samples.
+    """
+    layer_caps = jax.tree.map(lambda a: a[mod.layer], captures)
+    if mod.kind == "attn":
+        x = layer_caps["attn"]["wo_in"]
+        return x.reshape(-1, x.shape[-1]), None
+    if mod.kind == "ssm":
+        x = layer_caps["ssm_out_in"]
+        return x.reshape(-1, x.shape[-1]), None
+    if mod.kind == "moe":
+        x = layer_caps["ffn"]["wd_in"][mod.expert]       # (C, f)
+        valid = layer_caps["ffn"]["wd_valid"][mod.expert]
+        return x, valid
+    x = layer_caps["ffn"]["wd_in"]
+    return x.reshape(-1, x.shape[-1]), None
+
+
+def level_grid(mod: PrunableModule, steps: int = 43) -> List[int]:
+    """Sparsity levels as 'structures removed' counts.
+
+    Head-granular modules: 0..n (paper: 0..N_heads-1 heads pruned + drop).
+    FFN-like: intermediate size shrunk by 0.9^i for i=0..steps-1 (+ drop),
+    following the paper's Appendix E grid.
+    """
+    n = mod.n_structures
+    if mod.group_size > 1 or n <= 64:
+        return list(range(n + 1))
+    sizes = sorted({int(np.ceil(n * 0.9 ** i)) for i in range(steps)} | {0},
+                   reverse=True)
+    return [n - s for s in sizes]  # removed counts, ascending

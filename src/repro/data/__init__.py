@@ -1,0 +1,1 @@
+from .synthetic import calibration_batches, synthetic_stream

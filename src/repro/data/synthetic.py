@@ -1,0 +1,88 @@
+"""Deterministic synthetic data pipeline.
+
+A Zipfian Markov token stream with enough structure to be learnable (so
+training/pruning losses move meaningfully) while requiring no external
+datasets. Also provides calibration-batch extraction (the paper uses a
+small calibration set; Table 4 sweeps its size).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _markov_table(vocab: int, seed: int, branch: int = 8) -> np.ndarray:
+    """Sparse-ish row-stochastic transition table (vocab, branch) targets."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(vocab, branch))
+
+
+def synthetic_tokens(vocab: int, batch: int, seq: int, *, seed: int = 0,
+                     step: int = 0, corpus_seed: int = 0) -> np.ndarray:
+    """One deterministic batch of Markov-Zipf tokens (B, S).
+
+    ``seed``/``step`` vary the *samples*; the transition table (the
+    "corpus") is fixed by ``corpus_seed`` so training, calibration and
+    evaluation streams share one distribution.
+    """
+    rng = np.random.default_rng(seed * 1_000_003 + step)
+    table = _markov_table(vocab, corpus_seed)
+    branch = table.shape[1]
+    # Zipfian choice among branches makes low-index branches dominate
+    p = 1.0 / np.arange(1, branch + 1)
+    p /= p.sum()
+    out = np.empty((batch, seq), np.int64)
+    cur = rng.integers(0, vocab, size=batch)
+    for t in range(seq):
+        out[:, t] = cur
+        choice = rng.choice(branch, size=batch, p=p)
+        cur = table[cur, choice]
+        # occasional random restart to keep entropy up
+        restart = rng.random(batch) < 0.02
+        cur[restart] = rng.integers(0, vocab, size=int(restart.sum()))
+    return out
+
+
+def make_batch_np(cfg, batch: int, seq: int, *, seed: int = 0,
+                  step: int = 0) -> Dict[str, jnp.ndarray]:
+    b = {"tokens": jnp.asarray(
+        synthetic_tokens(cfg.vocab_size, batch, seq, seed=seed, step=step))}
+    if not cfg.causal:
+        b["labels"] = b["tokens"]
+        rng = np.random.default_rng(seed * 7 + step)
+        mask = rng.random((batch, seq)) < 0.15
+        tokens = np.asarray(b["tokens"]).copy()
+        tokens[mask] = 0  # [MASK]
+        b["tokens"] = jnp.asarray(tokens)
+        b["mask"] = jnp.asarray(mask)
+    if cfg.frontend != "none":
+        rng = np.random.default_rng(seed * 13 + step)
+        b["frontend"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.num_frontend_tokens,
+                                 cfg.frontend_dim)), jnp.dtype(cfg.dtype))
+    return b
+
+
+def synthetic_stream(cfg, batch: int, seq: int, *, seed: int = 0,
+                     start_step: int = 0) -> Iterator[Dict]:
+    step = start_step
+    while True:
+        yield make_batch_np(cfg, batch, seq, seed=seed, step=step)
+        step += 1
+
+
+def calibration_batches(cfg, n_samples: int, seq: int, *, batch: int = 8,
+                        seed: int = 1234) -> List[Dict]:
+    """n_samples calibration sequences in batches (paper: 512-2048 samples)."""
+    out = []
+    done = 0
+    step = 0
+    while done < n_samples:
+        b = min(batch, n_samples - done)
+        out.append(make_batch_np(cfg, b, seq, seed=seed, step=10_000 + step))
+        done += b
+        step += 1
+    return out

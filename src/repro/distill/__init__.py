@@ -1,0 +1,1 @@
+from .losses import distillation_loss, logit_kl, token_distill

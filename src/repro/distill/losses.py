@@ -1,0 +1,70 @@
+"""Layer-wise token distillation (paper §3.3, Eq. 5-6).
+
+L = l1*L_task + l2*L_logit + l3*L_token, where L_token is the padding-masked
+Euclidean distance between student and teacher per-token hidden vectors,
+averaged over all layer boundaries — no manual layer mapping needed because
+ZipLM preserves the hidden dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import cross_entropy, loss_fn
+from ..models.transformer import forward
+
+
+def logit_kl(student_logits, teacher_logits, mask=None):
+    """KL(teacher || student) over the vocabulary (Hinton distillation)."""
+    t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32), -1)
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32), -1)
+    kl = jnp.sum(jnp.exp(t) * (t - s), axis=-1)          # (B, S)
+    if mask is None:
+        return jnp.mean(kl)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(kl * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def token_distill(student_hiddens, teacher_hiddens, mask=None):
+    """Eq. 6: mean squared Euclidean distance between per-token hidden
+    vectors, over non-padded tokens, averaged over layers.
+
+    hiddens: (L, B, S, H).
+    """
+    d = (student_hiddens.astype(jnp.float32)
+         - teacher_hiddens.astype(jnp.float32))
+    sq = jnp.sum(d * d, axis=-1)                          # (L, B, S)
+    if mask is None:
+        return jnp.mean(sq)
+    m = mask.astype(jnp.float32)[None]
+    nl = sq.shape[0]
+    return jnp.sum(sq * m) / jnp.maximum(nl * jnp.sum(mask), 1.0)
+
+
+def distillation_loss(cfg, params, teacher_params, batch, *, l_task=1.0,
+                      l_logit=0.0, l_token=0.0):
+    """Combined loss; teacher forward is gradient-free."""
+    need_hiddens = l_token > 0.0
+    out = loss_fn(cfg, params, batch, collect_hiddens=need_hiddens)
+    total = l_task * out["loss"]
+    metrics = {"task_loss": out["loss"]}
+    if teacher_params is not None and (l_logit > 0.0 or l_token > 0.0):
+        t_out = jax.lax.stop_gradient(
+            forward(cfg, teacher_params, batch["tokens"],
+                    frontend_embeds=batch.get("frontend"),
+                    collect_hiddens=need_hiddens))
+        mask = batch.get("mask")
+        if l_logit > 0.0:
+            if cfg.causal:
+                kl = logit_kl(out["logits"][:, :-1], t_out["logits"][:, :-1],
+                              mask[:, 1:] if mask is not None else None)
+            else:
+                kl = logit_kl(out["logits"], t_out["logits"], mask)
+            total = total + l_logit * kl
+            metrics["logit_kl"] = kl
+        if l_token > 0.0:
+            tok = token_distill(out["hiddens"], t_out["hiddens"], mask)
+            total = total + l_token * tok
+            metrics["token_l2"] = tok
+    metrics["loss"] = total
+    return total, metrics

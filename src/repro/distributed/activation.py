@@ -1,0 +1,67 @@
+"""Activation sharding constraints.
+
+With FSDP-sharded weights, XLA's sharding propagation happily flows the
+*embed*-dim sharding into activations (full batch replicated per device,
+D split over the data axis) — catastrophic for activation memory and
+compute. Real frameworks pin activations at block boundaries; this module
+is the hook the model code calls. A launcher installs the (mesh, batch
+axes) context; without a context the hook is a no-op (single-device runs,
+tests).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def set_activation_context(mesh: Optional[Mesh], batch_axes) -> None:
+    _ctx.mesh = mesh
+    _ctx.batch_axes = batch_axes
+
+
+def clear_activation_context() -> None:
+    _ctx.mesh = None
+    _ctx.batch_axes = None
+
+
+class activation_context:
+    def __init__(self, mesh, batch_axes):
+        self.mesh, self.batch_axes = mesh, batch_axes
+
+    def __enter__(self):
+        set_activation_context(self.mesh, self.batch_axes)
+        return self
+
+    def __exit__(self, *a):
+        clear_activation_context()
+        return False
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin: batch dim -> data axes, all other dims replicated (the model
+    axis re-enters through the weights)."""
+    mesh = getattr(_ctx, "mesh", None)
+    ba = getattr(_ctx, "batch_axes", None)
+    if mesh is None or ba is None or x is None:
+        return x
+    if x.ndim <= batch_dim or x.shape[batch_dim] % _naxes(mesh, ba) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = ba
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _naxes(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

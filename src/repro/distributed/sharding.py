@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules -> mesh PartitionSpecs.
+
+Default profile (DESIGN.md §5): Megatron-style TP over "model" for
+heads/kv/mlp/experts/vocab + FSDP over the data axes ("pod","data") on the
+embed dimension of every weight (ZeRO-3: params, grads and optimizer state
+all fully sharded). Rules are divisibility-aware: a logical axis whose size
+does not divide the mesh axis falls back to replication (recorded so the
+dry-run report can flag it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import MeshConfig
+
+
+def make_mesh_from_config(mc: MeshConfig) -> Mesh:
+    return jax.make_mesh(
+        mc.shape, mc.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mc.axes))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_pspec(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh,
+                     mc: MeshConfig) -> P:
+    """Map one leaf's logical axis names to a PartitionSpec."""
+    fsdp_axes = tuple(mc.data_axes) if mc.fsdp else None
+    if mc.profile == "pure_fsdp":
+        # no tensor parallelism: everything replicated except the FSDP
+        # (embed) axis, which shards over the whole mesh
+        rules: Dict[Optional[str], Any] = {"embed": fsdp_axes}
+        out = []
+        for dim, name in zip(shape, spec):
+            axes = rules.get(name, None)
+            if axes is not None and dim % _axis_size(mesh, axes) != 0:
+                axes = None
+            out.append(axes)
+        return P(*out)
+    rules: Dict[Optional[str], Any] = {
+        None: None,
+        "layers": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "ssm": "model",
+        "ssm_heads": "model",
+        "experts": "model",
+        "mlp_noshard": None,
+        "embed": fsdp_axes,
+    }
+    out = []
+    for dim, name in zip(shape, spec):
+        axes = rules.get(name, None)
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None  # divisibility fallback -> replicate
+        out.append(axes)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, mc: MeshConfig, params, specs):
+    """Pytree of NamedShardings matching a (params, specs) pair.
+
+    ``specs`` mirrors ``params`` down to the leaves, where it holds a tuple
+    of logical axis names (flatten_up_to semantics of tree.map).
+    """
+    def one(leaf, spec):
+        return NamedSharding(mesh, logical_to_pspec(
+            tuple(spec), leaf.shape, mesh, mc))
+
+    return jax.tree.map(one, params, specs)
+
+
+def batch_axes(mesh: Mesh, mc: MeshConfig, batch: int):
+    axes = tuple(mc.data_axes)
+    if batch % _axis_size(mesh, axes) == 0:
+        return axes
+    for sub in (axes[:1], ()):
+        if not sub or batch % _axis_size(mesh, sub) == 0:
+            return sub or None
+    return None
+
+
+def batch_sharding(mesh: Mesh, mc: MeshConfig, batch: int) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_axes(mesh, mc, batch)))
+
+
+def _first_fit(mesh: Mesh, axis: str, dims, candidates):
+    """Pick the first dim index (from candidates) divisible by the axis."""
+    n = mesh.shape[axis]
+    for i in candidates:
+        if dims[i] % n == 0 and dims[i] >= n:
+            return i
+    return None
+
+
+def cache_shardings(cfg, mesh: Mesh, mc: MeshConfig, cache):
+    """Decode-cache shardings: batch over data axes; KV sequence over
+    "model" (context-parallel decode) when divisible, else heads/head_dim.
+    """
+    b_axes = None
+
+    def shard_leaf(path, leaf):
+        dims = leaf.shape
+        spec = [None] * len(dims)
+        if len(dims) >= 2:
+            # dim 0 is layers (or scalar pos); dim 1 is batch
+            ba = batch_axes(mesh, mc, dims[1]) if len(dims) > 1 else None
+            if ba:
+                spec[1] = ba
+        if len(dims) == 5:  # attn kv cache (L,B,S,H,D) or ssm state (L,B,H,P,N)
+            if mc.seq_shard_kv:
+                i = _first_fit(mesh, "model", dims, (2, 3))
+            else:
+                i = _first_fit(mesh, "model", dims, (3, 2))
+            if i is None:
+                i = _first_fit(mesh, "model", dims, (4,))
+            if i is not None:
+                spec[i] = "model"
+        elif len(dims) == 4:  # ssm conv cache (L,B,K-1,C)
+            i = _first_fit(mesh, "model", dims, (3,))
+            if i is not None:
+                spec[i] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(shard_leaf, cache)

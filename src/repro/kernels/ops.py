@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode; on TPU set
+``interpret=False`` (the default flips on backend detection).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .hessian_accum import hessian_accum_kernel
+from .ssd_scan import ssd_intra_chunk_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """q: (B, Sq, HQ, D), k/v: (B, Sk, HKV, D) -> (B, Sq, HQ, D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], d)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n",
+                                             "interpret"))
+def hessian_accum(x, *, block_d=256, block_n=512, interpret=None):
+    """(N, D) -> (D, D) fp32 X^T X."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return hessian_accum_kernel(x, block_d=block_d, block_n=block_n,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "interpret"))
+def ssd_chunked_kernel(x, dt, A, B, C, *, chunk=128, head_block=8,
+                       interpret=None):
+    """Full SSD via the Pallas intra-chunk kernel + lax inter-chunk scan.
+
+    Same signature/semantics as models.ssm.ssd_chunked.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc, q = sp // chunk, chunk
+
+    xb = x.reshape(b, nc, q, h, p)
+    dtb = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bb = B.reshape(b, nc, q, n)
+    Cb = C.reshape(b, nc, q, n)
+    dacs = jnp.cumsum(dtb * A, axis=2)
+    xdt = (xb.astype(jnp.float32) * dtb[..., None])
+
+    y_diag, states = ssd_intra_chunk_kernel(xdt, dacs, Bb, Cb,
+                                            head_block=head_block,
+                                            interpret=interpret)
+
+    chunk_decay = jnp.exp(dacs[:, :, -1, :])  # (b,nc,h)
+
+    def body(prev, inp):
+        st, dec = inp
+        return prev * dec[..., None, None] + st, prev
+
+    final, prev_states = jax.lax.scan(
+        body, jnp.zeros((b, h, p, n), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)
+
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cb.astype(jnp.float32), prev_states, jnp.exp(dacs))
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final

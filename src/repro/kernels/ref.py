@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately simple/direct implementations (dense attention,
+materialized X^T X, token-by-token SSD recurrence) — independent of the
+blocked algorithms they validate.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Dense attention. q: (BH, Sq, D), k/v: (BH, Sk, D) (heads pre-folded,
+    GQA pre-repeated)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(d)
+    sq, sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (q_offset)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def hessian_ref(x):
+    """(N, D) -> (D, D) = X^T X in fp32."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Token-by-token SSD recurrence (the definitionally-correct oracle).
+
+    x: (b,s,h,p), dt: (b,s,h) (already softplus'ed), A: (h,), B/C: (b,s,n).
+    Returns (y: (b,s,h,p), final_state: (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = (initial_state if initial_state is not None
+             else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * A)  # (b,h)
+        state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dtt,
+                              Bt.astype(jnp.float32),
+                              xt.astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk pass.
+
+Per (batch, chunk, head-block) grid step the kernel computes, entirely in
+VMEM:
+  scores  = C_chunk @ B_chunk^T                       (Q, Q)  MXU
+  L       = exp(segsum(dA)) (causal decay matrix)     (Q, Q, hb)
+  y_diag  = (scores * L) @ (x*dt)                     per head
+  states  = (B * decay_to_end)^T @ (x*dt)             chunk -> state
+The O(Q^2) decay/score tiles never reach HBM. The (cheap, sequential)
+inter-chunk recurrence and the y_off correction stay in lax (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(xdt_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref, *,
+                q: int, hb: int):
+    # blocks: xdt (1,1,Q,hb,P) dacs (1,1,Q,hb) b/c (1,1,Q,N)
+    xdt = xdt_ref[0, 0].astype(jnp.float32)        # (Q, hb, P)
+    dacs = dacs_ref[0, 0].astype(jnp.float32)      # (Q, hb)
+    B = b_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)            # (Q, N)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    # causal decay matrix per head: L[i,j,h] = exp(dacs[i,h] - dacs[j,h]) i>=j
+    diff = dacs[:, None, :] - dacs[None, :, :]     # (Q, Q, hb)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = (jj <= ii)[:, :, None]
+    L = jnp.exp(jnp.where(tril, diff, NEG_INF))    # (Q, Q, hb)
+    M = scores[:, :, None] * L                     # (Q, Q, hb)
+    # y_diag[i,h,p] = sum_j M[i,j,h] xdt[j,h,p]
+    y = jnp.einsum("ijh,jhp->ihp", M, xdt)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # chunk state: sum_j exp(dacs[-1,h]-dacs[j,h]) B[j,n] xdt[j,h,p]
+    decay_end = jnp.exp(dacs[-1:, :] - dacs)       # (Q, hb)
+    xw = xdt * decay_end[:, :, None]               # (Q, hb, P)
+    st = jnp.einsum("qn,qhp->hpn", B, xw)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_intra_chunk_kernel(xdt, dacs, B, C, *, head_block: int = 8,
+                           interpret: bool = True):
+    """Intra-chunk SSD.
+
+    xdt:  (b, nc, q, h, p) — dt-scaled inputs
+    dacs: (b, nc, q, h)    — cumulative sum of dt*A within chunk
+    B, C: (b, nc, q, n)
+    Returns (y_diag: (b,nc,q,h,p) fp32, states: (b,nc,h,p,n) fp32).
+    """
+    b, nc, q, h, p = xdt.shape
+    n = B.shape[-1]
+    hb = min(head_block, h)
+    while h % hb:
+        hb -= 1
+    nh = h // hb
+
+    kernel = functools.partial(_ssd_kernel, q=q, hb=hb)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, hb, p), lambda i, c, j: (i, c, 0, j, 0)),
+            pl.BlockSpec((1, 1, q, hb), lambda i, c, j: (i, c, 0, j)),
+            pl.BlockSpec((1, 1, q, n), lambda i, c, j: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, c, j: (i, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, hb, p), lambda i, c, j: (i, c, 0, j, 0)),
+            pl.BlockSpec((1, 1, hb, p, n), lambda i, c, j: (i, c, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, dacs, B, C)
+    return y, st

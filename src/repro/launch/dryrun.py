@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512"
+                           ).strip()
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: lower + compile the
+train_step / prefill / serve_step under the production sharding rules,
+print memory_analysis() (proves it fits) and cost_analysis() (FLOPs/bytes),
+run the HLO roofline analysis (loop-corrected), and persist a JSON record
+to results/dryrun/. Failures here are bugs in the sharding config.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _serve_shapes(tree):
+    """Cast float leaves to bf16 (serving weights)."""
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    return jax.tree.map(cast, tree)
+
+
+_F32_TRAIN_LEAVES = {"scale", "bias", "A_log", "D", "dt_bias", "norm",
+                     "gate", "conv_b"}
+
+
+def _train_param_shapes(tree):
+    """bf16 parameter storage (fp32 kept in Adam moments + norm/scalar
+    leaves): FSDP weight all-gathers then move bf16 on the wire instead of
+    fp32 masters — XLA sinks pre-scan converts into the loop otherwise."""
+    def cast(path, x):
+        leaf = str(getattr(path[-1], "key", ""))
+        if leaf in _F32_TRAIN_LEAVES or not jnp.issubdtype(
+                x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype)
+        return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+
+    return jax.tree_util.tree_map_with_path(cast, tree)
+
+
+def microbatches_for(cfg, shape_cfg, mc) -> int:
+    """1 sequence per device per microbatch (activation-memory discipline)."""
+    dp = 1
+    for ax, n in zip(mc.axes, mc.shape):
+        if ax in mc.data_axes:
+            dp *= n
+    per_dev = max(1, shape_cfg.global_batch // dp)
+    return int(per_dev)
+
+
+def shape_cfg_name_is_train(name: str) -> bool:
+    return name.startswith("train")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict = None, mesh_profile: str = None) -> dict:
+    from ..configs import get_config, shapes_for
+    from ..configs.base import TrainConfig
+    from ..distributed.sharding import (batch_sharding, cache_shardings,
+                                        param_shardings)
+    from ..models.model import input_specs, serve_prefill, serve_step
+    from ..models.transformer import model_init
+    from ..optim.adamw import adamw_init
+    from ..runtime.roofline import build_report
+    from ..train.train_step import TrainState, make_train_step, \
+        state_shardings
+    from .mesh import make_production_mesh, mesh_config
+
+    from ..distributed.activation import set_activation_context
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape_cfg = {s.name: s for s in shapes_for(arch)}[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mc = mesh_config(multi_pod=multi_pod)
+    if mesh_profile is None and shape_cfg_name_is_train(shape_name) \
+            and get_config(arch).num_params() < 5e9:
+        # <5B models train fastest with no TP at all (EXPERIMENTS §Perf H-A)
+        mesh_profile = "pure_fsdp"
+    if mesh_profile:
+        import dataclasses
+        mc = dataclasses.replace(mc, profile=mesh_profile)
+    chips = mc.num_devices
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    set_activation_context(mesh, tuple(mc.data_axes))
+
+    holder = {}
+
+    def make_params():
+        p, s = model_init(cfg, jax.random.key(0))
+        holder["specs"] = s
+        return p
+
+    t0 = time.time()
+    params_shape = jax.eval_shape(make_params)
+    specs = holder["specs"]
+    batch_specs = input_specs(cfg, shape_cfg)
+
+    if shape_cfg.mode == "train":
+        n_micro = microbatches_for(cfg, shape_cfg, mc)
+        tcfg = TrainConfig(microbatches=n_micro)
+        params_shape = _train_param_shapes(params_shape)
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        state = TrainState(params=params_shape, opt=opt_shape,
+                           step=jax.ShapeDtypeStruct((), jnp.int32),
+                           ef_err=None)
+        st_sh = state_shardings(mesh, mc, state, specs)
+        b_sh = jax.tree.map(
+            lambda l: batch_sharding(mesh, mc, l.shape[0]), batch_specs)
+        metr = NamedSharding(mesh, P())
+        step_fn = make_train_step(cfg, tcfg, mesh=mesh, mc=mc,
+                                  grad_shardings=st_sh.params)
+        jitted = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, {"loss": metr,
+                                                "grad_norm": metr,
+                                                "lr": metr}),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state, batch_specs)
+    elif shape_cfg.mode == "prefill":
+        sparams = _serve_shapes(params_shape)
+        p_sh = param_shardings(mesh, mc, sparams, specs)
+        b_sh = jax.tree.map(
+            lambda l: batch_sharding(mesh, mc, l.shape[0]), batch_specs)
+
+        def prefill_fn(params, batch):
+            return serve_prefill(cfg, params, batch,
+                                 max_len=shape_cfg.seq_len)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(sparams, batch_specs)
+    else:  # decode
+        sparams = _serve_shapes(params_shape)
+        p_sh = param_shardings(mesh, mc, sparams, specs)
+        cache = _serve_shapes(batch_specs["cache"])
+        c_sh = cache_shardings(cfg, mesh, mc, cache)
+        tok_sh = batch_sharding(mesh, mc, shape_cfg.global_batch)
+
+        def decode_fn(params, cache, tokens):
+            return serve_step(cfg, params, cache, tokens)
+
+        logits_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, tok_sh),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(sparams, cache, batch_specs["tokens"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)                      # proves it fits
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+
+    report = build_report(cfg, shape_cfg, mesh_name, chips, hlo,
+                          xla_cost=ca, memory_stats=mem)
+    rec = report.to_json()
+    rec.update(lower_s=t_lower, compile_s=t_compile,
+               hlo_bytes=len(hlo), status="ok",
+               microbatches=(microbatches_for(cfg, shape_cfg, mc)
+                             if shape_cfg.mode == "train" else 0))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    from ..configs import ASSIGNED, shapes_for
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        cells = [s.name for s in shapes_for(arch)]
+        shapes = cells if args.shape == "all" else \
+            [s for s in cells if s == args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp)
+                    print(f"  ok: compile={rec['compile_s']:.1f}s "
+                          f"mem={rec['memory_per_device_gb']:.2f}GB "
+                          f"bottleneck={rec['bottleneck']} "
+                          f"mfu={rec['mfu']:.3f}", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "fail", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    failures.append(tag)
+                    print(f"  FAIL: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("all cells ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Defined as a FUNCTION (not module-level constant) so importing this module
+never touches jax device state — jax locks the device count on first init,
+and only the dry-run is allowed to force 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD

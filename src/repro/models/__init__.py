@@ -1,0 +1,3 @@
+from .model import (cross_entropy, generate, input_specs, loss_fn, make_batch,
+                    serve_prefill, serve_step)
+from .transformer import decode_step, forward, init_cache, model_init

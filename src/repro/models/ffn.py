@@ -1,0 +1,56 @@
+"""Dense feed-forward blocks: SwiGLU (llama-family) and GELU MLP (BERT/GPT2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def ffn_init(key, cfg, nlayers: int):
+    d, f = cfg.d_model, cfg.d_ff
+    pfx = (nlayers,) if nlayers else ()
+    spfx = ("layers",) if nlayers else ()
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_activation == "swiglu":
+        p = {
+            "wg": dense_init(ks[0], pfx + (d, f)),
+            "wu": dense_init(ks[1], pfx + (d, f)),
+            "wd": dense_init(ks[2], pfx + (f, d)),
+        }
+        s = {
+            "wg": spfx + ("embed", "mlp"),
+            "wu": spfx + ("embed", "mlp"),
+            "wd": spfx + ("mlp", "embed"),
+        }
+    else:  # gelu MLP with biases
+        p = {
+            "wi": dense_init(ks[0], pfx + (d, f)),
+            "bi": jnp.zeros(pfx + (f,), jnp.float32),
+            "wd": dense_init(ks[2], pfx + (f, d)),
+            "bd": jnp.zeros(pfx + (d,), jnp.float32),
+        }
+        s = {
+            "wi": spfx + ("embed", "mlp"),
+            "bi": spfx + ("mlp",),
+            "wd": spfx + ("mlp", "embed"),
+            "bd": spfx + ("embed",),
+        }
+    return p, s
+
+
+def ffn_apply(cfg, p, x, capture=None):
+    dt = x.dtype
+    if cfg.ffn_activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt)) + p["bi"].astype(dt)
+        h = jax.nn.gelu(h)
+    if capture is not None:
+        capture["wd_in"] = h
+    y = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(dt))
+    if "bd" in p:
+        y = y + p["bd"].astype(dt)
+    return y

@@ -1,0 +1,126 @@
+"""Primitive layers: norms, rotary embeddings, initializers.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every init
+function returns ``(params, specs)`` where ``specs`` mirrors ``params`` with
+tuples of *logical axis names* per dimension; ``repro.distributed.sharding``
+maps logical names to mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis vocabulary:
+#   "layers"  — stacked-layer leading dim (never sharded)
+#   "embed"   — d_model dim (FSDP-sharded over data axes)
+#   "heads"   — fused q-head output dim (TP over "model")
+#   "kv"      — fused kv-head output dim (TP over "model" if divisible)
+#   "mlp"     — d_ff dim (TP over "model")
+#   "experts" — expert dim (EP over "model")
+#   "vocab"   — vocabulary dim (TP over "model")
+#   "ssm"     — ssm inner dim (TP over "model")
+#   None      — replicated
+
+
+def compute_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    """Truncated-normal fan-in init, stored fp32 then cast at use."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def norm_init(cfg, nlayers: Optional[int] = None, dim: Optional[int] = None):
+    d = dim if dim is not None else cfg.d_model
+    shape = (nlayers, d) if nlayers else (d,)
+    spec_prefix = ("layers",) if nlayers else ()
+    p = {"scale": jnp.ones(shape, jnp.float32)}
+    s = {"scale": spec_prefix + (None,)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros(shape, jnp.float32)
+        s["bias"] = spec_prefix + (None,)
+    return p, s
+
+
+def apply_norm(cfg, p, x, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        y = xf * jax.lax.rsqrt(
+            jnp.mean(xf * xf, axis=-1, keepdims=True) + cfg.norm_eps)
+        y = y * p["scale"]
+    return y.astype(out_dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Embeddings
+# ----------------------------------------------------------------------
+
+def embedding_init(key, cfg):
+    p = {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), in_axis=-1)}
+    s = {"table": ("vocab", "embed")}
+    if cfg.pos_emb == "learned":
+        p["pos"] = dense_init(jax.random.fold_in(key, 1),
+                              (cfg.max_position, cfg.d_model), in_axis=-1)
+        s["pos"] = (None, "embed")
+    return p, s
+
+
+def embed_tokens(cfg, p, tokens, positions=None):
+    x = jnp.take(p["table"], tokens, axis=0).astype(compute_dtype(cfg))
+    if cfg.pos_emb == "learned":
+        if positions is None:
+            positions = jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(x.dtype)
+    return x
+
+
+def unembed(cfg, emb_p, head_p, x):
+    """Project hidden states back to vocabulary logits (fp32)."""
+    if cfg.tie_embeddings:
+        w = emb_p["table"]
+    else:
+        w = head_p["w"]
+    return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype)
+                      ).astype(jnp.float32)
+
+
+def lm_head_init(key, cfg):
+    if cfg.tie_embeddings:
+        return {}, {}
+    return ({"w": dense_init(key, (cfg.vocab_size, cfg.d_model), in_axis=-1)},
+            {"w": ("vocab", "embed")})

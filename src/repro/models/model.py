@@ -1,0 +1,136 @@
+"""Model facade: init, loss, capture, prefill/decode, and dry-run input specs.
+
+This is the public API used by the trainer, the ZipLM pruner, the serving
+path and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .layers import compute_dtype
+from .transformer import decode_step, forward, init_cache, model_init
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-level CE. logits fp32 (B,S,V); labels (B,S); mask (B,S) or None."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg, params, batch, *, collect_hiddens=False):
+    """Next-token (decoder) or masked (encoder) LM loss."""
+    out = forward(cfg, params, batch["tokens"],
+                  frontend_embeds=batch.get("frontend"),
+                  collect_hiddens=collect_hiddens)
+    logits = out["logits"]
+    if cfg.causal:
+        logits = logits[:, :-1]
+        labels = batch["tokens"][:, 1:]
+        mask = batch.get("mask")
+        mask = mask[:, 1:] if mask is not None else None
+    else:
+        labels = batch["labels"]
+        mask = batch.get("mask")
+    loss = cross_entropy(logits, labels, mask)
+    out["loss"] = loss + 0.01 * out["aux"]
+    return out
+
+
+def make_batch(cfg, key, batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+    """Synthetic batch matching input_specs (for smoke tests / examples)."""
+    ks = jax.random.split(key, 3)
+    b = {"tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)}
+    if not cfg.causal:
+        b["labels"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size)
+    if cfg.frontend != "none":
+        b["frontend"] = jax.random.normal(
+            ks[2], (batch, cfg.num_frontend_tokens, cfg.frontend_dim),
+            jnp.float32).astype(compute_dtype(cfg))
+    return b
+
+
+def input_specs(cfg, shape_cfg, *, for_grad: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    train/prefill: token batch (+ frontend embeddings stub for audio/vlm).
+    decode: one-token batch + fully-populated KV/SSM cache structs.
+    """
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    dt = compute_dtype(cfg)
+
+    def sds(shape, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if shape_cfg.mode in ("train", "prefill"):
+        specs = {"tokens": sds((b, s))}
+        if not cfg.causal:
+            specs["labels"] = sds((b, s))
+        if cfg.frontend != "none":
+            specs["frontend"] = sds((b, cfg.num_frontend_tokens,
+                                     cfg.frontend_dim), dt)
+        return specs
+
+    # decode: single token + cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {"tokens": sds((b, 1)), "cache": cache}
+
+
+def serve_prefill(cfg, params, batch, max_len: Optional[int] = None):
+    """Prefill: full forward that also materializes the decode cache.
+
+    ``max_len`` sizes the KV cache (prompt + generation headroom); defaults
+    to 2x the prompt length.
+    """
+    b, s = batch["tokens"].shape
+    max_len = max_len or 2 * s
+    out = forward(cfg, params, batch["tokens"],
+                  frontend_embeds=batch.get("frontend"), mode="prefill")
+    cache = init_cache(cfg, b, max_len)
+    if "cache" in out:
+        pre = out["cache"]  # (L,B,Sc,HKV,D), ring-rolled if SWA
+        sc = cache["attn"]["k"].shape[2]
+        if pre["k"].shape[2] >= sc:  # SWA ring buffer already full-size
+            cache["attn"] = {"k": pre["k"][:, :, :sc], "v": pre["v"][:, :, :sc]}
+        else:
+            cache["attn"] = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["attn"]["k"], pre["k"], 0, axis=2),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["attn"]["v"], pre["v"], 0, axis=2),
+            }
+    if "cache_ssm" in out:
+        cache["ssm"] = out["cache_ssm"]
+    if "frontend_kv" in out:
+        cache["cross"] = out["frontend_kv"]
+    if "cross_kv" in out:
+        cache["cross"] = out["cross_kv"]
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return out["logits"][:, -1:], cache
+
+
+def serve_step(cfg, params, cache, tokens):
+    """One new token against an existing cache (the decode_* dry-run target)."""
+    return decode_step(cfg, params, cache, tokens)
+
+
+def generate(cfg, params, prompt, steps: int, *, frontend=None, key=None):
+    """Greedy/top-k generation loop (host-side loop; used in examples)."""
+    logits, cache = serve_prefill(
+        cfg, params, {"tokens": prompt, "frontend": frontend}
+        if frontend is not None else {"tokens": prompt})
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    outs = [tok]
+    step = jax.jit(lambda p, c, t: serve_step(cfg, p, c, t))
+    for _ in range(steps - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

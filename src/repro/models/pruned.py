@@ -1,0 +1,148 @@
+"""Heterogeneous pruned-model execution.
+
+After ZipLM shrink, layers have *different* head counts / FC widths (and
+some modules are dropped entirely), so the homogeneous ``lax.scan`` stack no
+longer applies. This module runs per-layer parameter lists with an unrolled
+loop, reusing the same primitive ops — this is where the structural speedup
+actually materializes (smaller matmuls / skipped modules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .layers import apply_norm, compute_dtype, embed_tokens, unembed
+
+
+@dataclass
+class PrunedLayer:
+    kv_groups: int = 0        # attention KV groups remaining (0 = dropped)
+    d_ff: int = 0             # FFN intermediate remaining (0 = dropped)
+    ssm_heads: int = 0
+    expert_ff: List[int] = field(default_factory=list)  # per remaining expert
+    params: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class PrunedModel:
+    cfg: Any                  # original ModelConfig
+    layers: List[PrunedLayer]
+    globals_: Dict[str, Any]  # embed / final_norm / head (+cross params)
+
+    def num_params(self) -> int:
+        leaves = jax.tree.leaves([l.params for l in self.layers]) \
+            + jax.tree.leaves(self.globals_)
+        return int(sum(x.size for x in leaves))
+
+    def encoder_params(self) -> int:
+        """Transformer-stack params only (paper reports 'encoder size')."""
+        return int(sum(x.size for l in self.layers
+                       for x in jax.tree.leaves(l.params)))
+
+
+def _attn_forward(cfg, lcfg: PrunedLayer, lp, x):
+    vcfg = cfg.replace(num_heads=lcfg.kv_groups * cfg.q_per_kv,
+                       num_kv_heads=lcfg.kv_groups)
+    out, _ = attn_mod.self_attention(vcfg, lp, x)
+    return out
+
+
+def _ffn_forward(cfg, lp, x):
+    dt = x.dtype
+    if "wg" in lp:
+        h = jax.nn.silu(x @ lp["wg"].astype(dt)) * (x @ lp["wu"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ lp["wi"].astype(dt) + lp["bi"].astype(dt))
+    y = h @ lp["wd"].astype(dt)
+    if "bd" in lp:
+        y = y + lp["bd"].astype(dt)
+    return y
+
+
+def _moe_forward(cfg, lcfg: PrunedLayer, lp, x):
+    """Pruned MoE: per-expert widths differ; dropped experts removed from
+    the router. Dense-gather dispatch per expert (unrolled; expert count is
+    small after pruning)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    n_exp = len(lcfg.expert_ff)
+    k = min(cfg.num_experts_per_tok, n_exp)
+    logits = (xf @ lp["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros((t, d), dt)
+    for e in range(n_exp):
+        w_e = jnp.where(topi == e, topw, 0.0).sum(-1).astype(dt)  # (t,)
+        ep = lp["experts"][e]
+        h = jax.nn.silu(xf @ ep["wg"].astype(dt)) * (xf @ ep["wu"].astype(dt))
+        out = out + w_e[:, None] * (h @ ep["wd"].astype(dt))
+    return out.reshape(b, s, d)
+
+
+def _ssm_forward(cfg, lcfg: PrunedLayer, lp, x):
+    """SSD block at pruned width (dims derive from the shrunk weights)."""
+    from . import ssm as ssm_mod
+    di = lcfg.ssm_heads * cfg.ssm_head_dim
+    dt_ = x.dtype
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    h = lcfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    z = x @ lp["in_z"].astype(dt_)
+    xs = x @ lp["in_x"].astype(dt_)
+    bc = x @ lp["in_bc"].astype(dt_)
+    dtv = x @ lp["in_dt"].astype(dt_)
+    xs = jax.nn.silu(ssm_mod.causal_conv1d(xs, lp["conv_x"],
+                                           lp["conv_x_b"]))
+    bc = jax.nn.silu(ssm_mod.causal_conv1d(bc, lp["conv_bc"],
+                                           lp["conv_bc_b"]))
+    B, C = jnp.split(bc, 2, axis=-1)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, _ = ssm_mod.ssd_chunked(xs.reshape(b, s, h, hp), dtv, A, B, C,
+                               cfg.ssm_chunk)
+    y = y + lp["D"].astype(dt_)[None, None, :, None] * xs.reshape(b, s, h, hp)
+    y = ssm_mod._gated_headnorm(y.reshape(b, s, di) * jax.nn.silu(z),
+                                lp["norm"], hp)
+    return y @ lp["out_proj"].astype(dt_)
+
+
+def forward_pruned(pm: PrunedModel, tokens, frontend_embeds=None):
+    """Unrolled forward over heterogeneous pruned layers -> fp32 logits."""
+    cfg = pm.cfg
+    x = embed_tokens(cfg, pm.globals_["embed"], tokens)
+    for lcfg in pm.layers:
+        lp = lcfg.params
+        attn_out = None
+        if lcfg.kv_groups > 0 and "attn" in lp:
+            h = apply_norm(cfg, lp["ln1"], x)
+            attn_out = _attn_forward(cfg, lcfg, lp["attn"], h)
+        ssm_out = None
+        if lcfg.ssm_heads > 0 and "ssm" in lp:
+            h = apply_norm(cfg, lp["ln1"], x)
+            ssm_out = _ssm_forward(cfg, lcfg, lp["ssm"], h)
+        if attn_out is not None and ssm_out is not None:
+            x = x + 0.5 * (attn_out + ssm_out)
+        elif cfg.hybrid and (attn_out is not None or ssm_out is not None):
+            live = attn_out if attn_out is not None else ssm_out
+            x = x + 0.5 * live
+        elif attn_out is not None:
+            x = x + attn_out
+        elif ssm_out is not None:
+            x = x + ssm_out
+
+        if lcfg.expert_ff:
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + _moe_forward(cfg, lcfg, lp["moe"], h2)
+        elif lcfg.d_ff > 0 and ("ffn" in lp):
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + _ffn_forward(cfg, lp["ffn"], h2)
+    x = apply_norm(cfg, pm.globals_["final_norm"], x)
+    return unembed(cfg, pm.globals_["embed"], pm.globals_.get("head", {}), x)

@@ -1,0 +1,248 @@
+"""Mamba-2 SSD (state-space duality) layer: chunked quadratic-within /
+linear-across formulation (arXiv:2405.21060), plus the single-token
+recurrent decode step. The chunked scan is the algorithmic twin of
+``repro.kernels.ssd_scan`` (Pallas).
+
+TP note (EXPERIMENTS.md §Perf H-A): we use *separate* z/x/B/C/dt
+projections instead of mamba2's fused in_proj. The fused layout's split
+boundaries (di, 2di, 2di+n, ...) do not align with model-axis shard
+boundaries, which forces an all-gather of the projection output and
+replicates every downstream SSD einsum on all TP ranks (a 16x compute-term
+regression on a 16-way mesh). Separate projections are mathematically
+identical and shard cleanly: z/x over heads, B/C/dt replicated (small).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+NEG_INF = -1e30
+
+
+def ssm_init(key, cfg, nlayers: int):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    k = cfg.ssm_conv
+    pfx = (nlayers,) if nlayers else ()
+    spfx = ("layers",) if nlayers else ()
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_z": dense_init(ks[0], pfx + (d, di)),
+        "in_x": dense_init(ks[1], pfx + (d, di)),
+        "in_bc": dense_init(ks[2], pfx + (d, 2 * n)),
+        "in_dt": dense_init(ks[3], pfx + (d, h)),
+        "conv_x": dense_init(ks[4], pfx + (k, di), in_axis=-2) * 0.1,
+        "conv_x_b": jnp.zeros(pfx + (di,), jnp.float32),
+        "conv_bc": dense_init(ks[5], pfx + (k, 2 * n), in_axis=-2) * 0.1,
+        "conv_bc_b": jnp.zeros(pfx + (2 * n,), jnp.float32),
+        "A_log": jnp.zeros(pfx + (h,), jnp.float32),
+        "D": jnp.ones(pfx + (h,), jnp.float32),
+        "dt_bias": jnp.full(pfx + (h,), -1.0, jnp.float32),
+        "norm": jnp.ones(pfx + (di,), jnp.float32),
+        "out_proj": dense_init(ks[6], pfx + (di, d)),
+    }
+    s = {
+        "in_z": spfx + ("embed", "ssm"),
+        "in_x": spfx + ("embed", "ssm"),
+        "in_bc": spfx + ("embed", None),
+        "in_dt": spfx + ("embed", "ssm_heads"),
+        "conv_x": spfx + (None, "ssm"),
+        "conv_x_b": spfx + ("ssm",),
+        "conv_bc": spfx + (None, None),
+        "conv_bc_b": spfx + (None,),
+        "A_log": spfx + ("ssm_heads",),
+        "D": spfx + ("ssm_heads",),
+        "dt_bias": spfx + ("ssm_heads",),
+        "norm": spfx + ("ssm",),
+        "out_proj": spfx + ("ssm", "embed"),
+    }
+    return p, s
+
+
+def _gated_headnorm(y, scale, head_dim: int):
+    """Grouped (per-head) RMSNorm over the last dim split into heads."""
+    dt_ = y.dtype
+    shp = y.shape
+    yf = y.astype(jnp.float32).reshape(*shp[:-1], shp[-1] // head_dim,
+                                       head_dim)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+    return (yf.reshape(shp) * scale).astype(dt_)
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal 1D conv as K explicit shift-multiply-adds.
+
+    x: (B,S,C), w: (K,C), b: (C,). For the short SSD conv (K=4) this is
+    exactly K fused multiply-adds per element; crucially its *backward* is
+    also elementwise. lax.conv_general_dilated's depthwise wgrad lowers to
+    a dense CxC cross-channel convolution on XLA (3.4 TFLOP/layer at
+    mamba2 dims — EXPERIMENTS.md §Perf H-A measured it dominating the
+    whole train step).
+    """
+    k = w.shape[0]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = b.astype(x.dtype)
+    for j in range(k):
+        out = out + w[j].astype(x.dtype) * xp[:, j:j + s]
+    return out
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD. x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n).
+
+    Returns (y: (b,s,h,p), final_state: (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc, q = sp // chunk, chunk
+
+    xb = x.reshape(b, nc, q, h, p)
+    dtb = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bb = B.reshape(b, nc, q, n)
+    Cb = C.reshape(b, nc, q, n)
+
+    dA = dtb * A                              # (b,nc,q,h), <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic) term
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (b,nc,q,k,h)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.exp(jnp.where(tril[None, None, :, :, None], diff, NEG_INF))
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cb, Bb)
+    xdt = xb * dtb[..., None].astype(x.dtype)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp",
+                        scores.astype(jnp.float32), L,
+                        xdt.astype(jnp.float32))
+
+    # per-chunk final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bb.astype(jnp.float32), decay_states,
+                        xdt.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # (b,nc,h)
+    init = (initial_state if initial_state is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def body(prev, inp):
+        st, dec = inp
+        return prev * dec[..., None, None] + st, prev
+
+    final, prev_states = jax.lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    state_decay = jnp.exp(dA_cs)                              # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cb.astype(jnp.float32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def _project(cfg, p, x):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(dt_))
+    bc = jnp.einsum("bsd,de->bse", x, p["in_bc"].astype(dt_))
+    dt = jnp.einsum("bsd,de->bse", x, p["in_dt"].astype(dt_))
+    return z, xs, bc, dt
+
+
+def ssm_apply(cfg, p, x, capture=None, return_cache: bool = False):
+    """Full SSD block for train/prefill. x: (B,S,D) -> (B,S,D)."""
+    dt_ = x.dtype
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+
+    z, xs, bc, dt = _project(cfg, p, x)
+    xs = jax.nn.silu(causal_conv1d(xs, p["conv_x"], p["conv_x_b"]))
+    bc = jax.nn.silu(causal_conv1d(bc, p["conv_bc"], p["conv_bc_b"]))
+    B, C = jnp.split(bc, 2, axis=-1)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, s, h, hp)
+    y, final_state = ssd_chunked(xh, dtv, A, B, C, cfg.ssm_chunk)
+    cache = None
+    if return_cache:
+        k = cfg.ssm_conv
+        raw_x = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(dt_))
+        raw_bc = jnp.einsum("bsd,de->bse", x, p["in_bc"].astype(dt_))
+        tail_x = raw_x[:, -(k - 1):]
+        tail_bc = raw_bc[:, -(k - 1):]
+        if s < k - 1:
+            tail_x = jnp.pad(tail_x, ((0, 0), (k - 1 - s, 0), (0, 0)))
+            tail_bc = jnp.pad(tail_bc, ((0, 0), (k - 1 - s, 0), (0, 0)))
+        cache = {"state": final_state, "conv_x": tail_x, "conv_bc": tail_bc}
+    y = y + p["D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+
+    # per-head gated RMSNorm (mamba2 grouped RMSNormGated): keeps head
+    # pruning self-contained — removed heads cannot shift kept heads' norm
+    y = _gated_headnorm(y * jax.nn.silu(z), p["norm"], hp)
+    if capture is not None:
+        capture["ssm_out_in"] = y        # inputs to out_proj (ZipLM target)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return (out, cache) if return_cache else out
+
+
+def init_ssm_cache(cfg, batch: int, nlayers: int, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    h, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((nlayers, batch, h, hp, n), jnp.float32),
+        "conv_x": jnp.zeros((nlayers, batch, cfg.ssm_conv - 1, di), dtype),
+        "conv_bc": jnp.zeros((nlayers, batch, cfg.ssm_conv - 1, 2 * n),
+                             dtype),
+    }
+
+
+def ssm_decode_step(cfg, p, x, cache):
+    """Single-token recurrent step. x: (B,1,D); cache per layer:
+    {state, conv_x, conv_bc}. Returns (y: (B,1,D), new_cache)."""
+    dt_ = x.dtype
+    b = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+
+    z, xs_r, bc_r, dt = _project(cfg, p, x)
+    # conv rings: window = [cache | current]
+    win_x = jnp.concatenate([cache["conv_x"], xs_r[:, :1]], axis=1)
+    win_bc = jnp.concatenate([cache["conv_bc"], bc_r[:, :1]], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x,
+                                p["conv_x"].astype(dt_))
+                     + p["conv_x_b"].astype(dt_))
+    bc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc,
+                                p["conv_bc"].astype(dt_))
+                     + p["conv_bc_b"].astype(dt_))
+    B, C = jnp.split(bc, 2, axis=-1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, h, hp).astype(jnp.float32)
+    dA = jnp.exp(dtv * A)                                       # (b,h)
+    state = (cache["state"] * dA[..., None, None]
+             + jnp.einsum("bh,bn,bhp->bhpn", dtv, B.astype(jnp.float32),
+                          xh))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(dt_)
+
+    y = _gated_headnorm(y * jax.nn.silu(z), p["norm"], hp)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"state": state, "conv_x": win_x[:, 1:],
+                 "conv_bc": win_bc[:, 1:]}

@@ -1,0 +1,477 @@
+"""Transformer stacks: init + forward (train / prefill / decode) for every
+assigned family (dense / moe / ssm / hybrid / vlm / audio enc-dec / encoder).
+
+Layers are stacked along a leading ``layers`` dim and executed with
+``jax.lax.scan`` (+ per-block ``jax.remat``) so the HLO is O(1) in depth.
+VLM cross-attention layers use a two-level scan: outer over groups of
+``cross_attn_every`` self-layers, each followed by one cross-attn module.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.activation import constrain_batch
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (apply_norm, compute_dtype, dense_init, embed_tokens,
+                     embedding_init, lm_head_init, norm_init, unembed)
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def _block_init(cfg, key, nlayers: int, *, kind: str):
+    """kind: self | ssm | hybrid | decoder (self+cross)."""
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    ks = iter(jax.random.split(key, 8))
+    if kind != "ssm":
+        p["ln1"], s["ln1"] = norm_init(cfg, nlayers)
+        p["attn"], s["attn"] = attn_mod.attention_init(next(ks), cfg, nlayers)
+        p["ln2"], s["ln2"] = norm_init(cfg, nlayers)
+        if cfg.num_experts:
+            p["moe"], s["moe"] = moe_mod.moe_init(next(ks), cfg, nlayers)
+        else:
+            p["ffn"], s["ffn"] = ffn_mod.ffn_init(next(ks), cfg, nlayers)
+        if kind == "hybrid":
+            p["ssm"], s["ssm"] = ssm_mod.ssm_init(next(ks), cfg, nlayers)
+        if kind == "decoder":
+            p["lnx"], s["lnx"] = norm_init(cfg, nlayers)
+            p["xattn"], s["xattn"] = attn_mod.attention_init(
+                next(ks), cfg, nlayers, cross=True)
+    else:
+        p["ln1"], s["ln1"] = norm_init(cfg, nlayers)
+        p["ssm"], s["ssm"] = ssm_mod.ssm_init(next(ks), cfg, nlayers)
+    return p, s
+
+
+def block_kind(cfg) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.hybrid:
+        return "hybrid"
+    if cfg.encoder_decoder:
+        return "decoder"
+    return "self"
+
+
+def model_init(cfg, key):
+    """Returns (params, specs) for the full model."""
+    ks = iter(jax.random.split(key, 10))
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["embed"], s["embed"] = embedding_init(next(ks), cfg)
+    p["layers"], s["layers"] = _block_init(cfg, next(ks), cfg.num_layers,
+                                           kind=block_kind(cfg))
+    p["final_norm"], s["final_norm"] = norm_init(cfg)
+    p["head"], s["head"] = lm_head_init(next(ks), cfg)
+
+    if cfg.encoder_decoder:
+        enc_cfg = cfg.replace(causal=False, attention="full")
+        p["enc_layers"], s["enc_layers"] = _block_init(
+            enc_cfg, next(ks), cfg.num_encoder_layers, kind="self")
+        p["enc_norm"], s["enc_norm"] = norm_init(cfg)
+        p["enc_pos"] = dense_init(next(ks), (cfg.num_frontend_tokens,
+                                             cfg.d_model), in_axis=-1)
+        s["enc_pos"] = (None, "embed")
+
+    if cfg.cross_attn_every:
+        g = cfg.num_layers // cfg.cross_attn_every
+        p["cross"], s["cross"] = {}, {}
+        p["cross"]["lnx"], s["cross"]["lnx"] = norm_init(cfg, g)
+        p["cross"]["xattn"], s["cross"]["xattn"] = attn_mod.attention_init(
+            next(ks), cfg, g, cross=True)
+        if cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+            p["frontend_proj"] = dense_init(
+                next(ks), (cfg.frontend_dim, cfg.d_model))
+            s["frontend_proj"] = (None, "embed")
+    return p, s
+
+
+# ----------------------------------------------------------------------
+# block forward (full-sequence; used by train & prefill)
+# ----------------------------------------------------------------------
+
+def _self_block(cfg, lp, x, *, build_cache: bool, capture: bool):
+    """One standard block. Returns (x, aux, cache_kv, captures)."""
+    caps: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    cap_attn = {} if capture else None
+    h = apply_norm(cfg, lp["ln1"], x)
+    kind = block_kind(cfg)
+
+    cache_kv = None
+    if build_cache:
+        # recompute k/v for the cache (prefill); attention itself reuses them
+        q, k, v = attn_mod._project_qkv(cfg, lp["attn"], h, h)
+        if cfg.pos_emb == "rope":
+            pos = jnp.arange(h.shape[1])[None, :]
+            k = attn_mod.apply_rope(k, pos, cfg.rope_theta)
+        cache_kv = (k, v)
+
+    a, _ = attn_mod.self_attention(cfg, lp["attn"], h, capture=cap_attn)
+    ssm_cache = None
+    if kind == "hybrid":
+        m = ssm_mod.ssm_apply(cfg, lp["ssm"], h,
+                              capture=caps if capture else None,
+                              return_cache=build_cache)
+        if build_cache:
+            m, ssm_cache = m
+        a = 0.5 * (a + m)
+    x = x + a
+    if capture:
+        caps["attn"] = cap_attn
+
+    h2 = apply_norm(cfg, lp["ln2"], x)
+    cap_ffn = {} if capture else None
+    if cfg.num_experts:
+        f, aux = moe_mod.moe_apply(cfg, lp["moe"], h2, capture=cap_ffn)
+    else:
+        f = ffn_mod.ffn_apply(cfg, lp["ffn"], h2, capture=cap_ffn)
+    x = x + f
+    if capture:
+        caps["ffn"] = cap_ffn
+    return x, aux, cache_kv, ssm_cache, caps
+
+
+def _ssm_block(cfg, lp, x, *, build_cache: bool = False, capture: bool):
+    caps: Dict[str, Any] = {}
+    h = apply_norm(cfg, lp["ln1"], x)
+    y = ssm_mod.ssm_apply(cfg, lp["ssm"], h,
+                          capture=caps if capture else None,
+                          return_cache=build_cache)
+    ssm_cache = None
+    if build_cache:
+        y, ssm_cache = y
+    return x + y, jnp.zeros((), jnp.float32), None, ssm_cache, caps
+
+
+def _decoder_block(cfg, lp, x, enc_kv, *, build_cache: bool = False,
+                   capture: bool):
+    caps: Dict[str, Any] = {}
+    cap_a = {} if capture else None
+    h = apply_norm(cfg, lp["ln1"], x)
+    cache_kv = None
+    if build_cache:
+        _, k, v = attn_mod._project_qkv(cfg, lp["attn"], h, h)
+        if cfg.pos_emb == "rope":
+            pos = jnp.arange(h.shape[1])[None, :]
+            k = attn_mod.apply_rope(k, pos, cfg.rope_theta)
+        cache_kv = (k, v)
+    a, _ = attn_mod.self_attention(cfg, lp["attn"], h, capture=cap_a)
+    x = x + a
+    hx = apply_norm(cfg, lp["lnx"], x)
+    cap_x = {} if capture else None
+    x = x + attn_mod.cross_attention(cfg, lp["xattn"], hx, enc_kv,
+                                     capture=cap_x)
+    h2 = apply_norm(cfg, lp["ln2"], x)
+    cap_f = {} if capture else None
+    x = x + ffn_mod.ffn_apply(cfg, lp["ffn"], h2, capture=cap_f)
+    if capture:
+        caps.update(attn=cap_a, xattn=cap_x, ffn=cap_f)
+    return x, jnp.zeros((), jnp.float32), cache_kv, None, caps
+
+
+def _maybe_remat(cfg, fn):
+    return jax.remat(fn) if cfg.remat == "block" else fn
+
+
+_F32_LAYER_LEAVES = {"scale", "bias", "A_log", "D", "dt_bias", "norm",
+                     "gate", "conv_b"}
+
+
+def _cast_layer_params(layers_p, dt):
+    """Cast the big matmul weights to compute dtype BEFORE the layer scan:
+    the per-layer FSDP all-gather then moves bf16 instead of fp32 master
+    weights (halves gather wire bytes). Norm/scalar leaves stay fp32."""
+    def cast(path, x):
+        leaf = str(getattr(path[-1], "key", ""))
+        if leaf in _F32_LAYER_LEAVES or not jnp.issubdtype(
+                x.dtype, jnp.floating):
+            return x
+        return x.astype(dt)
+
+    return jax.tree_util.tree_map_with_path(cast, layers_p)
+
+
+# ----------------------------------------------------------------------
+# full-sequence stacks
+# ----------------------------------------------------------------------
+
+def _scan_stack(cfg, layers_p, x, body_fn, *, collect_hiddens: bool):
+    """Scan body_fn over stacked layer params."""
+    def body(carry, lp):
+        x = constrain_batch(carry)
+        x, aux, cache_kv, ssm_cache, caps = body_fn(x, lp)
+        x = constrain_batch(x)
+        ys = {"aux": aux}
+        if cache_kv is not None:
+            ys["cache_k"], ys["cache_v"] = cache_kv
+        if ssm_cache is not None:
+            ys["cache_ssm"] = ssm_cache
+        if caps:
+            ys["caps"] = caps
+        if collect_hiddens:
+            ys["hidden"] = x
+        return x, ys
+
+    x, ys = jax.lax.scan(body, x, layers_p)
+    return x, ys
+
+
+def encoder_forward(cfg, params, frontend_embeds, *, capture: bool = False):
+    """Whisper-style encoder over precomputed frame embeddings."""
+    enc_cfg = cfg.replace(causal=False, attention="full")
+    x = frontend_embeds.astype(compute_dtype(cfg))
+    x = x + params["enc_pos"][None, :x.shape[1]].astype(x.dtype)
+
+    def body2(x, lp):
+        y, aux, _, _, caps = _self_block(enc_cfg, lp, x, build_cache=False,
+                                         capture=capture)
+        return y, aux, None, None, caps
+
+    x, ys = _scan_stack(cfg, params["enc_layers"], x,
+                        _maybe_remat(cfg, body2), collect_hiddens=False)
+    return apply_norm(cfg, params["enc_norm"], x), ys
+
+
+def forward(cfg, params, tokens, *, frontend_embeds=None, mode: str = "train",
+            capture: bool = False, collect_hiddens: bool = False):
+    """Full-sequence forward.
+
+    mode: "train" (logits over all positions) or "prefill" (also returns the
+    KV cache). Returns dict(logits, hiddens?, caches?, captures?, aux).
+    """
+    dt = compute_dtype(cfg)
+    build_cache = mode == "prefill"
+    x = constrain_batch(embed_tokens(cfg, params["embed"], tokens))
+    out: Dict[str, Any] = {}
+    params = dict(params)
+    params["layers"] = _cast_layer_params(params["layers"], dt)
+
+    enc_kv = None
+    if cfg.encoder_decoder:
+        enc_out, _ = encoder_forward(cfg, params, frontend_embeds,
+                                     capture=capture)
+        out["encoder_out"] = enc_out
+        # per-layer cross K/V: vmap over stacked decoder layer params
+        enc_kv = jax.vmap(lambda lp: attn_mod.cross_kv(cfg, lp, enc_out))(
+            params["layers"]["xattn"])
+        out["cross_kv"] = enc_kv
+
+    cross_kv_g = None
+    if cfg.cross_attn_every:
+        fe = frontend_embeds.astype(dt)
+        if "frontend_proj" in params:
+            fe = jnp.einsum("btf,fd->btd", fe, params["frontend_proj"].astype(dt))
+        cross_kv_g = jax.vmap(lambda lp: attn_mod.cross_kv(cfg, lp, fe))(
+            params["cross"]["xattn"])
+        out["frontend_kv"] = cross_kv_g
+
+    kind = block_kind(cfg)
+    if kind == "ssm":
+        def body(x, lp):
+            return _ssm_block(cfg, lp, x, build_cache=build_cache,
+                              capture=capture)
+    elif kind == "decoder":
+        def body(x, lp):
+            lp, kv = lp["lp"], lp["kv"]
+            return _decoder_block(cfg, lp, x, kv, build_cache=build_cache,
+                                  capture=capture)
+    else:
+        def body(x, lp):
+            return _self_block(cfg, lp, x, build_cache=build_cache,
+                               capture=capture)
+
+    body = _maybe_remat(cfg, body)
+
+    if cfg.cross_attn_every:
+        # two-level scan: groups of `every` self layers + 1 cross module
+        every = cfg.cross_attn_every
+        g = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(g, every, *a.shape[1:]), params["layers"])
+
+        def group_body(x, gp):
+            lp, cp, kv = gp["layers"], gp["cross"], gp["kv"]
+
+            def inner(x, lp1):
+                x = constrain_batch(x)
+                x, aux, ckv, scache, caps = body(x, lp1)
+                x = constrain_batch(x)
+                ys = {"aux": aux}
+                if ckv is not None:
+                    ys["cache_k"], ys["cache_v"] = ckv
+                if scache is not None:
+                    ys["cache_ssm"] = scache
+                if caps:
+                    ys["caps"] = caps
+                if collect_hiddens:
+                    ys["hidden"] = x
+                return x, ys
+
+            x, ys = jax.lax.scan(inner, x, lp)
+            hx = apply_norm(cfg, cp["lnx"], x)
+            cap_x = {} if capture else None
+            x = x + attn_mod.cross_attention(cfg, cp["xattn"], hx, kv,
+                                             capture=cap_x)
+            if capture:
+                ys["cross_caps"] = cap_x
+            return x, ys
+
+        cross_grouped = params["cross"]
+        x, ys = jax.lax.scan(
+            group_body, x,
+            {"layers": grouped, "cross": cross_grouped, "kv": cross_kv_g})
+        # flatten (g, every, ...) -> (L, ...)
+        ys = jax.tree.map(
+            lambda a: (a.reshape(cfg.num_layers, *a.shape[2:])
+                       if a.ndim >= 2 and a.shape[:2] == (g, every) else a), ys)
+    elif kind == "decoder":
+        x, ys = _scan_stack(cfg, {"lp": params["layers"], "kv": enc_kv}, x,
+                            body, collect_hiddens=collect_hiddens)
+    else:
+        x, ys = _scan_stack(cfg, params["layers"], x, body,
+                            collect_hiddens=collect_hiddens)
+
+    x = apply_norm(cfg, params["final_norm"], constrain_batch(x))
+    out["logits"] = unembed(cfg, params["embed"], params.get("head", {}), x)
+    out["aux"] = jnp.mean(ys["aux"]) if "aux" in ys else jnp.zeros(())
+    if collect_hiddens:
+        out["hiddens"] = ys.get("hidden")
+    if capture and "caps" in ys:
+        out["captures"] = ys["caps"]
+    if build_cache and "cache_k" in ys:
+        out["cache"] = _ring_cache(cfg, ys["cache_k"], ys["cache_v"])
+    if build_cache and "cache_ssm" in ys:
+        out["cache_ssm"] = ys["cache_ssm"]
+    return out
+
+
+def _ring_cache(cfg, k, v):
+    """(L,B,S,HKV,D) prefill keys -> ring-buffer cache for decode."""
+    window = cfg.window_size if cfg.attention == "sliding_window" else 0
+    s = k.shape[2]
+    if window and s > window:
+        k, v = k[:, :, -window:], v[:, :, -window:]
+        shift = (s - window) % window
+        k = jnp.roll(k, shift, axis=2)
+        v = jnp.roll(v, shift, axis=2)
+    return {"k": k, "v": v}
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=None):
+    """Allocate decode caches for the whole stack."""
+    dtype = dtype or compute_dtype(cfg)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    kind = block_kind(cfg)
+    if kind != "ssm" and cfg.attention != "none":
+        cache["attn"] = attn_mod.init_kv_cache(cfg, batch, seq_len,
+                                               cfg.num_layers, dtype)
+    if kind in ("ssm", "hybrid"):
+        cache["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, cfg.num_layers, dtype)
+    if cfg.encoder_decoder:
+        t = cfg.num_frontend_tokens
+        dh = cfg.resolved_head_dim
+        shape = (cfg.num_layers, batch, t, cfg.num_kv_heads, dh)
+        cache["cross"] = {"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)}
+    if cfg.cross_attn_every:
+        g = cfg.num_layers // cfg.cross_attn_every
+        t = cfg.num_frontend_tokens
+        dh = cfg.resolved_head_dim
+        shape = (g, batch, t, cfg.num_kv_heads, dh)
+        cache["cross"] = {"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)}
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), new_cache)."""
+    pos = cache["pos"]
+    x = constrain_batch(embed_tokens(
+        cfg, params["embed"], tokens,
+        positions=pos[None] if cfg.pos_emb == "learned" else None))
+    kind = block_kind(cfg)
+
+    def body(x, lp):
+        x = constrain_batch(x)
+        new_c = {}
+        if kind == "ssm":
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, new_c["ssm"] = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h,
+                                                      lp["cache_ssm"])
+            x = x + y
+            return x, new_c
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, new_c["attn"] = attn_mod.self_attention(
+            cfg, lp["attn"], h, cache=lp["cache_attn"], cache_pos=pos)
+        if kind == "hybrid":
+            m, new_c["ssm"] = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h,
+                                                      lp["cache_ssm"])
+            a = 0.5 * (a + m)
+        x = x + a
+        if kind == "decoder":
+            hx = apply_norm(cfg, lp["lnx"], x)
+            x = x + attn_mod.cross_attention(cfg, lp["xattn"], hx,
+                                             lp["cache_cross"])
+        h2 = apply_norm(cfg, lp["ln2"], x)
+        if cfg.num_experts:
+            f, _ = moe_mod.moe_apply(cfg, lp["moe"], h2)
+        else:
+            f = ffn_mod.ffn_apply(cfg, lp["ffn"], h2)
+        x = x + f
+        return x, new_c
+
+    scan_in = dict(params["layers"])
+    if "attn" in cache:
+        scan_in["cache_attn"] = cache["attn"]
+    if "ssm" in cache:
+        scan_in["cache_ssm"] = cache["ssm"]
+    if kind == "decoder":
+        scan_in["cache_cross"] = cache["cross"]
+
+    if cfg.cross_attn_every:
+        every = cfg.cross_attn_every
+        g = cfg.num_layers // every
+        grouped = jax.tree.map(lambda a: a.reshape(g, every, *a.shape[1:]),
+                               scan_in)
+
+        def group_body(x, gp):
+            def inner(x, lp1):
+                return body(x, lp1)
+            x, new_c = jax.lax.scan(inner, x, gp["layers"])
+            hx = apply_norm(cfg, gp["cross"]["lnx"], x)
+            x = x + attn_mod.cross_attention(cfg, gp["cross"]["xattn"], hx,
+                                             gp["kv"])
+            return x, new_c
+
+        x, new_caches = jax.lax.scan(
+            group_body, x,
+            {"layers": grouped, "cross": params["cross"],
+             "kv": cache["cross"]})
+        new_caches = jax.tree.map(
+            lambda a: a.reshape(cfg.num_layers, *a.shape[2:]), new_caches)
+    else:
+        x, new_caches = jax.lax.scan(body, x, scan_in)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], params.get("head", {}), x)
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if "attn" in new_caches:
+        new_cache["attn"] = new_caches["attn"]
+    if "ssm" in new_caches:
+        new_cache["ssm"] = new_caches["ssm"]
+    return logits, new_cache

@@ -1,0 +1,23 @@
+"""LR schedules: linear warmup + {linear, cosine, constant} decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                  kind: str = "linear", min_frac: float = 0.05):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        if kind == "cosine":
+            decay = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(
+                jnp.pi * frac))
+        elif kind == "constant":
+            decay = 1.0
+        else:  # linear (paper's in-between-pruning schedule)
+            decay = 1.0 - (1 - min_frac) * frac
+        return base_lr * warm * decay
+
+    return schedule

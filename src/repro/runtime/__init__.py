@@ -1,0 +1,2 @@
+from . import costmodel
+from .costmodel import TPU_V5E, HardwareSpec, InferenceEnv

@@ -1,0 +1,421 @@
+"""HLO-text cost analysis with while-loop trip-count correction.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE,
+not x trip-count (verified empirically in this container) — useless for
+scanned-transformer rooflines. This module parses ``compiled.as_text()``
+directly:
+
+* splits the module into computations and builds per-computation symbol
+  tables (op name -> result shape);
+* counts dot/convolution FLOPs from shapes + contracting dims (recursing
+  into fusions: kOutput fusions may contain dots);
+* counts HBM bytes as operand+result sizes of top-level fusions / dots /
+  copies / reduces / etc. (post-fusion buffer traffic);
+* counts collective wire bytes with a ring model, with the group size N
+  parsed from replica_groups ([G,N]<=[...] or explicit {{...}} form);
+* extracts each while loop's trip count from the constant in its condition
+  computation and multiplies body costs (recursively, so nested scans —
+  microbatch x layers x flash-KV — compose).
+
+All numbers are per-device (the optimized HLO is the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3b11fnuz": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)="
+    r"[{]?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)[}]?")
+_REPL_GROUPS_ITER_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPL_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class OpInfo:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # name -> type
+    ops: List[OpInfo] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type
+
+
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*([^,]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and not line.strip().startswith("//"):
+            cur = Computation(name=hdr.group(2))
+            for pm in _PARAM_RE.finditer(hdr.group(3)):
+                cur.params[pm.group(1)] = pm.group(2).strip()
+                cur.symbols[pm.group(1)] = pm.group(2).strip()
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs: "TYPE opcode(...), attrs" — tuple types contain /*index=N*/
+        # comments, so take a balanced-paren scan rather than a regex
+        if rhs.startswith("("):
+            depth = 0
+            end = -1
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            if end < 0:
+                continue
+            rtype, rest = rhs[:end + 1], rhs[end + 1:].strip()
+        else:
+            tm = re.match(
+                r"^([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+(.*)$", rhs)
+            if not tm:
+                continue
+            rtype, rest = tm.group(1), tm.group(2)
+        om = _OPCODE_RE.match(rest)
+        opcode = om.group(1) if om else rest.split("(")[0].strip()
+        paren = rest[rest.find("("):]
+        # operands: %names within the first balanced paren group
+        depth = 0
+        end = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = paren[:end + 1]
+        operands = _OPERAND_RE.findall(operand_str)
+        op = OpInfo(name=name, result_type=rtype, opcode=opcode,
+                    operands=operands, raw=rest)
+        cur.ops.append(op)
+        cur.symbols[name] = rtype
+    return comps, entry
+
+
+def _while_trip_count(comps: Dict[str, Computation], cond_name: str,
+                      raw: str = "") -> int:
+    """Prefer XLA's backend_config known_trip_count; fall back to the
+    constant a scan condition compares its counter against."""
+    m = re.search(r'known_trip_count[\\"\s:{]+n[\\"\s:]+(\d+)', raw)
+    if m:
+        return int(m.group(1))
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        m = re.search(r"constant\((\d+)\)", op.raw)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, op: OpInfo) -> float:
+    out_dims = shape_dims(op.result_type) or []
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # contracted size from lhs shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.raw)
+    contract = 1
+    if m and op.operands:
+        lhs_type = comp.symbols.get(op.operands[0], "")
+        lhs_dims = shape_dims(lhs_type) or []
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(comp: Computation, op: OpInfo) -> float:
+    """2 * |out| * prod(window) * rhs_in_per_group, with the rhs 'i' dim
+    located via dim_labels (handles wgrad convs whose layouts differ)."""
+    out_dims = shape_dims(op.result_type) or []
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    m = re.search(r"window=\{size=([0-9x]+)", op.raw)
+    ksz = 1
+    if m:
+        for d in m.group(1).split("x"):
+            ksz *= int(d)
+    in_per_group = 1
+    if len(op.operands) > 1:
+        rhs_dims = shape_dims(comp.symbols.get(op.operands[1], "")) or []
+        dl = re.search(r"dim_labels=[^_]*_([0-9a-z]+)->", op.raw)
+        if dl and rhs_dims:
+            labels = dl.group(1)  # e.g. "0io" / "io01"
+            if "i" in labels and labels.index("i") < len(rhs_dims):
+                in_per_group = rhs_dims[labels.index("i")]
+        elif len(rhs_dims) >= 2:
+            in_per_group = rhs_dims[-2]
+    return 2.0 * out_n * ksz * in_per_group
+
+
+_BYTES_OPCODES = {
+    "fusion", "dot", "convolution", "copy", "transpose", "reduce",
+    "scatter", "gather", "dynamic-update-slice", "dynamic-slice",
+    "broadcast", "convert", "select-and-scatter", "pad", "slice",
+    "concatenate", "reverse", "sort", "rng", "exponential", "add",
+    "multiply", "subtract", "divide", "maximum", "minimum", "compare",
+    "select", "tanh", "log", "custom-call", "reduce-window", "iota",
+    "reshape",
+}
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0          # ring-model wire bytes
+    coll_bytes_raw: float = 0.0      # plain operand-size sum (spec formula)
+    coll_ops: Dict[str, float] = field(default_factory=dict)
+    coll_detail: List = field(default_factory=list)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_bytes_raw += other.coll_bytes_raw * mult
+        for k, v in other.coll_ops.items():
+            self.coll_ops[k] = self.coll_ops.get(k, 0.0) + v * mult
+        for d in other.coll_detail:
+            self.coll_detail.append((d[0], d[1] * mult, d[2]))
+
+
+def _group_size(raw: str, total_devices: int) -> int:
+    m = _REPL_GROUPS_ITER_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    m = _REPL_GROUPS_LIST_RE.search(raw)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return total_devices
+
+
+def _collective_wire_bytes(op: OpInfo, comp: Computation, n: int
+                           ) -> Tuple[float, float]:
+    rbytes = shape_bytes(op.result_type)
+    obytes = sum(shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+    kind = op.opcode.replace("-start", "")
+    if kind.startswith("all-reduce"):
+        wire = 2.0 * rbytes * (n - 1) / max(n, 1)
+    elif kind.startswith("all-gather"):
+        wire = rbytes * (n - 1) / max(n, 1)
+    elif kind.startswith("reduce-scatter"):
+        wire = rbytes * (n - 1)
+    elif kind.startswith("all-to-all"):
+        wire = rbytes * (n - 1) / max(n, 1)
+    else:  # collective-permute
+        wire = rbytes
+    return wire, obytes
+
+
+def _fusion_bytes(comps: Dict[str, Computation], name: str,
+                  outer: Computation, op: OpInfo) -> float:
+    """Slice-aware byte accounting for one fusion call.
+
+    Parameters that are only read through (dynamic-)slice ops inside the
+    fusion are charged at the slice size, not the full operand (the
+    per-layer weight/residual stacks are read one slice per scan step);
+    a dynamic-update-slice root writes only the update, aliasing the
+    buffer in place.
+    """
+    comp = comps.get(name)
+    if comp is None:
+        return shape_bytes(op.result_type) + sum(
+            shape_bytes(outer.symbols.get(o, "")) for o in op.operands)
+    # alias map: convert/bitcast/copy/reshape of a parameter
+    alias: Dict[str, str] = {}
+    for o in comp.ops:
+        if o.opcode in ("convert", "bitcast", "copy", "reshape") \
+                and o.operands and (o.operands[0] in comp.params
+                                    or o.operands[0] in alias):
+            alias[o.name] = alias.get(o.operands[0], o.operands[0])
+
+    sliced: Dict[str, float] = {}
+    direct: set = set()
+    dus_targets: set = set()
+    root = comp.ops[-1] if comp.ops else None
+    for o in comp.ops:
+        srcs = [alias.get(s, s) for s in o.operands]
+        if o.opcode in ("dynamic-slice", "slice"):
+            if srcs and srcs[0] in comp.params:
+                sliced[srcs[0]] = sliced.get(srcs[0], 0.0) \
+                    + shape_bytes(o.result_type)
+                srcs = srcs[1:]
+        elif o.opcode == "dynamic-update-slice":
+            if srcs and srcs[0] in comp.params:
+                dus_targets.add(srcs[0])  # aliased in place; not re-read
+                srcs = srcs[1:]
+        for s in srcs:
+            if s in comp.params:
+                direct.add(s)
+
+    total = 0.0
+    for pname, ptype in comp.params.items():
+        if pname in direct:
+            total += shape_bytes(ptype)
+        elif pname in sliced:
+            total += sliced[pname]
+        # params only DUS-targeted are in-place aliases: charge 0 reads
+    # result: DUS root writes only the update slice
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and root.operands and len(root.operands) > 1:
+        total += shape_bytes(comp.symbols.get(root.operands[1], ""))
+    else:
+        total += shape_bytes(op.result_type)
+    return total
+
+
+def analyze_computation(comps: Dict[str, Computation], name: str,
+                        total_devices: int, memo: Dict[str, Costs],
+                        fusion_ctx: bool = False) -> Costs:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    c = Costs()
+    if comp is None:
+        memo[name] = c
+        return c
+    memo[name] = c  # break cycles
+    for op in comp.ops:
+        opc = op.opcode
+        if opc == "while":
+            body = cond = None
+            bm = re.search(r"body=%?([\w\.\-]+)", op.raw)
+            cm = re.search(r"condition=%?([\w\.\-]+)", op.raw)
+            if bm:
+                body = bm.group(1)
+            if cm:
+                cond = cm.group(1)
+            trips = _while_trip_count(comps, cond, op.raw) if cond else 1
+            sub = analyze_computation(comps, body, total_devices, memo) \
+                if body else Costs()
+            c.add(sub, trips)
+            c.add(Costs(), 0)
+        elif opc == "fusion":
+            m = re.search(r"calls=%?([\w\.\-]+)", op.raw)
+            if m:
+                sub = analyze_computation(comps, m.group(1), total_devices,
+                                          memo, fusion_ctx=True)
+                # only dot/conv flops propagate out of a fusion
+                c.flops += sub.flops
+                c.bytes += _fusion_bytes(comps, m.group(1), comp, op)
+            else:
+                c.bytes += shape_bytes(op.result_type) + sum(
+                    shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+        elif opc in ("call", "conditional", "async-start"):
+            for m in _CALL_ATTR_RE.finditer(op.raw):
+                for sub_name in re.split(r",\s*%?", m.group(1)):
+                    sub = analyze_computation(comps, sub_name.strip("% "),
+                                              total_devices, memo)
+                    c.add(sub, 1.0)
+        elif opc == "dot":
+            c.flops += _dot_flops(comp, op)
+            if not fusion_ctx:
+                c.bytes += shape_bytes(op.result_type) + sum(
+                    shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+        elif opc == "convolution":
+            c.flops += _conv_flops(comp, op)
+            if not fusion_ctx:
+                c.bytes += shape_bytes(op.result_type) + sum(
+                    shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+        elif any(opc.startswith(k) for k in COLLECTIVES):
+            if opc.endswith("-done"):
+                continue
+            n = _group_size(op.raw, total_devices)
+            wire, obytes = _collective_wire_bytes(op, comp, n)
+            c.coll_bytes += wire
+            c.coll_bytes_raw += obytes
+            key = opc.replace("-start", "")
+            c.coll_ops[key] = c.coll_ops.get(key, 0.0) + wire
+            c.coll_detail.append((key, wire, op.result_type[:64]))
+        elif not fusion_ctx and opc in _BYTES_OPCODES:
+            if opc in ("dynamic-slice", "slice"):
+                c.bytes += 2.0 * shape_bytes(op.result_type)
+            elif opc == "dynamic-update-slice" and len(op.operands) > 1:
+                c.bytes += 2.0 * shape_bytes(
+                    comp.symbols.get(op.operands[1], ""))
+            else:
+                c.bytes += shape_bytes(op.result_type) + sum(
+                    shape_bytes(comp.symbols.get(o, "")) for o in op.operands)
+    memo[name] = c
+    return c
+
+
+def analyze_hlo_text(text: str, total_devices: int) -> Costs:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k].ops)) if comps else ""
+    return analyze_computation(comps, entry, total_devices, {})

@@ -1,0 +1,74 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(path: str = "results/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single_pod_16x16") -> str:
+    rows = [
+        "| arch | shape | comp | mem | coll | bottleneck | MFU | "
+        "useful 6ND/HLO | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['mfu']:.3f} | "
+            f"{r['useful_ratio']:.2f} | {r['memory_per_device_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | compile | HLO GFLOPs/dev | "
+        "coll GB/dev (wire) | mem/dev GB | fits 16GB* |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{'multi' if 'multi' in r['mesh'] else 'single'} | "
+            f"{r['compile_s']:.1f}s | {r['flops']/1e9:.0f} | "
+            f"{r['coll_bytes']/1e9:.2f} | {r['memory_per_device_gb']:.2f} | "
+            f"{'yes' if r['fits_hbm'] else 'no'} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    singles = [r for r in ok if r["mesh"] == "single_pod_16x16"]
+    worst = min(singles, key=lambda r: r["mfu"]) if singles else None
+    coll = max(singles, key=lambda r: r["collective_s"]
+               / max(r["step_time_s"], 1e-30)) if singles else None
+    return {"n_ok": len(ok), "n_fail": len(recs) - len(ok),
+            "worst_mfu": worst, "most_collective_bound": coll}
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    s = summarize(recs)
+    print(f"cells ok={s['n_ok']} fail={s['n_fail']}")
+    print(roofline_table(recs))

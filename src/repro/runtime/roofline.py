@@ -1,0 +1,98 @@
+"""Roofline terms for a compiled dry-run cell (deliverable g).
+
+  compute term    = HLO_FLOPs(per-device, loop-corrected) / peak_FLOP/s
+  memory term     = HLO_bytes(per-device, loop-corrected) / HBM_bw
+  collective term = wire_bytes(per-device, ring model)    / link_bw
+
+plus the dominant bottleneck, MODEL_FLOPS = 6·N·D (2·N·D inference), and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from .costmodel import TPU_V5E, HardwareSpec
+from .hlo_analysis import Costs, analyze_hlo_text
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device, loop-corrected
+    flops: float
+    bytes: float
+    coll_bytes: float
+    coll_bytes_raw: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_ratio: float
+    step_time_s: float          # max of the three terms (no-overlap bound)
+    mfu: float                  # model_flops / (step_time * peak)
+    hw_frac: float              # dominant-term share: how roofline-bound
+    coll_ops: Dict[str, float]
+    # raw cost_analysis() for transparency (uncorrected)
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+    memory_per_device_gb: float = 0.0
+    fits_hbm: bool = True
+
+    def to_json(self) -> Dict:
+        return asdict(self)
+
+
+def model_flops(cfg, shape_cfg) -> float:
+    """Global useful FLOPs per step: 6ND train, 2ND prefill/decode
+    (N = active params for MoE)."""
+    n = cfg.num_params(active_only=True)
+    if shape_cfg.mode == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n * tokens
+    if shape_cfg.mode == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape_cfg.global_batch
+
+
+def build_report(cfg, shape_cfg, mesh_name: str, chips: int, hlo_text: str,
+                 *, xla_cost: Optional[dict] = None,
+                 memory_stats=None, hw: HardwareSpec = TPU_V5E
+                 ) -> RooflineReport:
+    costs = analyze_hlo_text(hlo_text, chips)
+    compute_s = costs.flops / hw.peak_flops
+    memory_s = costs.bytes / hw.hbm_bw
+    collective_s = costs.coll_bytes / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_dev = model_flops(cfg, shape_cfg) / chips
+    step = max(terms.values())
+    mem_gb = 0.0
+    fits = True
+    if memory_stats is not None:
+        # donated outputs alias their inputs — don't double count
+        mem_gb = (memory_stats.argument_size_in_bytes
+                  + memory_stats.output_size_in_bytes
+                  - memory_stats.alias_size_in_bytes
+                  + memory_stats.temp_size_in_bytes) / 1e9
+        fits = mem_gb <= hw.hbm_bytes / 1e9
+    return RooflineReport(
+        arch=cfg.name, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops=costs.flops, bytes=costs.bytes, coll_bytes=costs.coll_bytes,
+        coll_bytes_raw=costs.coll_bytes_raw,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops_per_device=mf_dev,
+        useful_ratio=mf_dev / max(costs.flops, 1.0),
+        step_time_s=step, mfu=mf_dev / max(step * hw.peak_flops, 1e-30),
+        hw_frac=terms[bottleneck] / max(sum(terms.values()), 1e-30),
+        coll_ops=dict(costs.coll_ops),
+        xla_flops=(xla_cost or {}).get("flops", 0.0),
+        xla_bytes=(xla_cost or {}).get("bytes accessed", 0.0),
+        memory_per_device_gb=mem_gb, fits_hbm=fits)

@@ -1,0 +1,3 @@
+from .train_step import (TrainState, make_eval_step, make_train_state,
+                         make_train_step, state_shardings)
+from .trainer import Trainer

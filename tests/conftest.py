@@ -1,0 +1,45 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import GPT2_SMALL
+from repro.configs.base import TrainConfig
+from repro.data import calibration_batches, synthetic_stream
+from repro.models import model_init
+from repro.train.train_step import make_train_state, make_train_step
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return TINY
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return model_init(tiny_cfg, jax.random.key(0))[0]
+
+
+@pytest.fixture(scope="session")
+def trained_tiny(tiny_cfg):
+    """A tiny GPT2 trained enough that pruning comparisons are meaningful."""
+    params, _ = model_init(tiny_cfg, jax.random.key(0))
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=10, total_steps=120,
+                       microbatches=1)
+    step = jax.jit(make_train_step(tiny_cfg, tcfg))
+    state = make_train_state(tiny_cfg, params, tcfg)
+    data = synthetic_stream(tiny_cfg, 16, 64, seed=7)
+    losses = []
+    for _ in range(120):
+        state, m = step(state, next(data))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, "tiny model failed to train"
+    return state.params, losses
+
+
+@pytest.fixture(scope="session")
+def tiny_calib(tiny_cfg):
+    return calibration_batches(tiny_cfg, 16, 64, batch=8)

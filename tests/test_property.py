@@ -1,0 +1,101 @@
+"""Hypothesis property tests for system invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.obs import (build_hessian, optimal_update_bruteforce,
+                            prune_structured)
+from repro.core.spdy import dp_select
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_groups=st.integers(2, 6),
+    gs=st.integers(1, 4),
+    d_out=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_obs_single_removal_optimal(n_groups, gs, d_out, seed):
+    """For any shape, ZipLM's update equals the closed-form least-squares
+    optimum for the structure it removed."""
+    rng = np.random.default_rng(seed)
+    d_in = n_groups * gs
+    X = rng.standard_normal((5 * d_in + 10, d_in))
+    W = rng.standard_normal((d_in, d_out))
+    H = build_hessian(jnp.asarray(X.T @ X / len(X), jnp.float32), 1e-5)
+    Hinv = jnp.linalg.inv(H)
+    res = prune_structured(jnp.asarray(W, jnp.float32), Hinv, group_size=gs,
+                           n_remove=1, levels=(1,))
+    g = int(res.order[0])
+    rows = np.arange(g * gs, (g + 1) * gs)
+    ref = optimal_update_bruteforce(W, np.asarray(H), rows)
+    np.testing.assert_allclose(res.snapshots[0], ref, atol=5e-3, rtol=5e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_groups=st.integers(3, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_obs_error_monotone_nonnegative(n_groups, seed):
+    rng = np.random.default_rng(seed)
+    gs, d_out = 2, 4
+    d_in = n_groups * gs
+    X = rng.standard_normal((4 * d_in + 8, d_in))
+    W = rng.standard_normal((d_in, d_out))
+    Hinv = jnp.linalg.inv(
+        build_hessian(jnp.asarray(X.T @ X / len(X), jnp.float32), 1e-5))
+    levels = tuple(range(n_groups + 1))
+    res = prune_structured(jnp.asarray(W, jnp.float32), Hinv, group_size=gs,
+                           n_remove=n_groups, levels=levels)
+    errs = np.asarray(res.errors)
+    assert np.all(errs >= -1e-5)
+    assert np.all(np.diff(errs) >= -1e-4)
+    # removal order is a permutation
+    assert sorted(np.asarray(res.order).tolist()) == list(range(n_groups))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    nlev=st.integers(2, 5),
+    seed=st.integers(0, 10_000),
+    budget_frac=st.floats(0.3, 1.0),
+)
+def test_dp_select_feasible_and_optimal(m, nlev, seed, budget_frac):
+    """DP result always meets the budget; on small instances it matches
+    brute force."""
+    rng = np.random.default_rng(seed)
+    costs = [np.sort(rng.random(nlev))[::-1].copy() for _ in range(m)]
+    times = [np.sort(rng.random(nlev) + 0.01)[::-1].copy() for _ in range(m)]
+    budget = budget_frac * sum(t[0] for t in times) + 1e-9
+    choices, total = dp_select(costs, times, budget, nbins=512)
+    if choices is None:
+        # brute force must also be infeasible
+        import itertools
+        feas = any(sum(times[i][c] for i, c in enumerate(combo)) <= budget
+                   for combo in itertools.product(range(nlev), repeat=m))
+        assert not feas
+        return
+    assert sum(times[i][c] for i, c in enumerate(choices)) <= budget + 1e-9
+    # brute-force optimum (with the same quantization tolerance)
+    import itertools
+    best = np.inf
+    for combo in itertools.product(range(nlev), repeat=m):
+        t = sum(times[i][c] for i, c in enumerate(combo))
+        if t <= budget:
+            best = min(best, sum(costs[i][c] for i, c in enumerate(combo)))
+    got = sum(costs[i][c] for i, c in enumerate(choices))
+    # ceil-quantization can cost a near-boundary optimum; allow slack
+    assert got <= best + 0.25 or np.isclose(got, best, rtol=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(10, 200), d=st.integers(2, 32))
+def test_hessian_psd(seed, n, d):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d))
+    H = np.asarray(build_hessian(jnp.asarray(X.T @ X / n, jnp.float32)))
+    evals = np.linalg.eigvalsh(H)
+    assert evals.min() > 0

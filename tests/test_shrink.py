@@ -1,0 +1,72 @@
+"""Shrink equivalence: the materialized smaller model reproduces the masked
+model's outputs exactly, across all structure families."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import GPT2_SMALL, smoke_config
+from repro.core.database import apply_assignment, build_database
+from repro.core.hessian import collect_hessians
+from repro.core.shrink import shrink
+from repro.core.structures import registry
+from repro.data import calibration_batches
+from repro.models import model_init
+from repro.models.pruned import forward_pruned
+from repro.models.transformer import forward
+
+
+def _check(cfg, assignment_fn, tol=2e-2):
+    params, _ = model_init(cfg, jax.random.key(0))
+    calib = calibration_batches(cfg, 8, 48, batch=8)
+    hess = collect_hessians(cfg, params, calib)
+    db = build_database(cfg, params, hess)
+    assignment = assignment_fn(registry(cfg))
+    masked = apply_assignment(cfg, params, db, assignment)
+    pm = shrink(cfg, masked, db, assignment)
+    tokens = calib[0]["tokens"]
+    ref = forward(cfg, masked, tokens)["logits"]
+    got = forward_pruned(pm, tokens)
+    err = float(jnp.max(jnp.abs(ref - got)))
+    assert err < tol, err
+    assert pm.num_params() < sum(
+        x.size for x in jax.tree.leaves(params))
+    return pm
+
+
+def test_shrink_gpt2_mha():
+    cfg = GPT2_SMALL.replace(num_layers=2, d_model=64, d_ff=128, num_heads=4,
+                             num_kv_heads=4, head_dim=16, vocab_size=256,
+                             dtype="float32")
+    _check(cfg, lambda mods: {m.name: (1 if m.kind == "attn" else 40)
+                              for m in mods})
+
+
+def test_shrink_module_drop():
+    cfg = GPT2_SMALL.replace(num_layers=2, d_model=64, d_ff=128, num_heads=4,
+                             num_kv_heads=4, head_dim=16, vocab_size=256,
+                             dtype="float32")
+
+    def asgn(mods):
+        a = {}
+        for m in mods:
+            if m.name == "L1.attn":
+                a[m.name] = m.n_structures  # whole-module drop
+            elif m.kind == "attn":
+                a[m.name] = 2
+            else:
+                a[m.name] = 100
+        return a
+
+    pm = _check(cfg, asgn)
+    assert pm.layers[1].kv_groups == 0  # module physically gone
+
+
+@pytest.mark.parametrize("arch,asgn", [
+    ("qwen2-72b", lambda m: 1 if m.kind == "attn" else 90),    # GQA
+    ("mamba2-2.7b", lambda m: 3),                              # SSD heads
+    ("hymba-1.5b", lambda m: 1 if m.kind != "ffn" else 60),    # hybrid
+    ("dbrx-132b", lambda m: 1 if m.kind == "attn" else 60),    # MoE experts
+])
+def test_shrink_families(arch, asgn):
+    cfg = smoke_config(arch).replace(dtype="float32")
+    _check(cfg, lambda mods: {m.name: asgn(m) for m in mods})

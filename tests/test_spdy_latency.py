@@ -1,0 +1,81 @@
+"""Latency tables + structured SPDY: runtime guarantees and inference-
+awareness (paper §3.2)."""
+import numpy as np
+import pytest
+
+from repro.configs import BERT_BASE, GPT2_SMALL
+from repro.core.latency import build_table
+from repro.core.structures import level_grid, registry
+from repro.runtime.costmodel import (TPU_V5E, InferenceEnv, attn_time,
+                                     ffn_time, matmul_time)
+
+
+def test_latency_table_monotone_costmodel():
+    cfg = BERT_BASE
+    env = InferenceEnv(batch=128, seq=384, mode="prefill")
+    tab = build_table(cfg, env, backend="costmodel")
+    for kind in tab.grids:
+        t = tab.times[kind]
+        assert np.all(np.diff(t) <= 1e-12), (kind, t)  # more removed, faster
+        assert t[-1] == 0.0 or tab.grids[kind][-1] < cfg.d_ff
+    # paper Appendix E shape: dense attn slower than dense-but-one, etc.
+    mods = registry(cfg)
+    dense = tab.dense_runtime(mods)
+    assert dense > tab.base > 0
+
+
+def test_device_dependence_paper_table3():
+    """Same sparsity, different device capability -> different speedup
+    (the paper's V100-vs-A100 observation, v5e-1 vs v5e-TP4 here)."""
+    cfg = BERT_BASE
+    env1 = InferenceEnv(batch=128, seq=128, mode="prefill", tp=1)
+    env4 = InferenceEnv(batch=128, seq=128, mode="prefill", tp=4)
+    s1 = ffn_time(cfg, env1, 3072) / ffn_time(cfg, env1, 302)
+    s4 = ffn_time(cfg, env4, 3072) / ffn_time(cfg, env4, 302)
+    assert s1 > s4 * 1.2, (s1, s4)  # bigger device saturates less
+
+
+def test_matmul_time_tiling_penalty():
+    env = InferenceEnv(batch=1, seq=1)
+    # off-tile n wastes MXU: 130 is barely faster than 256 but much
+    # slower than its "share" of 2048
+    t_2048 = matmul_time(env, 4096, 4096, 2048)
+    t_130 = matmul_time(env, 4096, 4096, 130)
+    assert t_130 > t_2048 * (130 / 2048)
+
+
+def test_spdy_meets_budget_and_beats_uniform(trained_tiny, tiny_cfg,
+                                             tiny_calib):
+    from repro.core.database import apply_assignment, build_database
+    from repro.core.hessian import collect_hessians
+    from repro.core.magnitude import uniform_assignment
+    from repro.core.oneshot import calib_loss_fn
+    from repro.core.spdy import search
+
+    params, _ = trained_tiny
+    env = InferenceEnv(batch=16, seq=128, mode="prefill")
+    tab = build_table(tiny_cfg, env, backend="costmodel")
+    hess = collect_hessians(tiny_cfg, params, tiny_calib)
+    db = build_database(tiny_cfg, params, hess)
+    loss = calib_loss_fn(tiny_cfg, tiny_calib[:1])
+    res = search(db, tab, 2.0, steps=40,
+                 eval_fn=lambda a: loss(
+                     apply_assignment(tiny_cfg, params, db, a)))
+    # guarantee: achieved >= target
+    assert res.speedup >= 2.0 - 1e-6
+    # SPDY (non-uniform) no worse than the uniform heuristic
+    uni = uniform_assignment(tiny_cfg, tab, 2.0)
+    uni_loss = loss(apply_assignment(tiny_cfg, params, db, uni))
+    assert res.score <= uni_loss + 1e-3
+
+
+def test_level_grid_follows_paper():
+    cfg = BERT_BASE
+    mods = registry(cfg)
+    ffn = [m for m in mods if m.kind == "ffn"][0]
+    grid = level_grid(ffn)
+    sizes = sorted({int(np.ceil(3072 * 0.9 ** i)) for i in range(43)} | {0},
+                   reverse=True)
+    assert grid == [3072 - s for s in sizes]
+    attn = [m for m in mods if m.kind == "attn"][0]
+    assert level_grid(attn) == list(range(13))  # 12 heads + drop

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the ZipLM system: train -> one-shot prune
+a family with guarantees -> shrink -> the shrunk model is faster (measured)
+and barely worse (accuracy); gradual pipeline recovers loss."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.oneshot import oneshot_prune
+from repro.core.pipeline import gradual_prune
+from repro.core.shrink import shrink
+from repro.data import calibration_batches, synthetic_stream
+from repro.models.pruned import forward_pruned
+from repro.models.transformer import forward
+from repro.runtime.costmodel import InferenceEnv
+
+ENV = InferenceEnv(batch=8, seq=64, mode="prefill")
+
+
+def test_end_to_end_prune_family(trained_tiny, tiny_cfg, tiny_calib):
+    params, train_losses = trained_tiny
+    # measured-on-CPU latency table: at tiny dims the analytic v5e table is
+    # MXU-floor-dominated (only module drops move runtime — the paper's
+    # Table 3 saturation effect); CPU timings scale with width instead.
+    res = oneshot_prune(tiny_cfg, params, tiny_calib, ENV,
+                        targets=[1.5, 2.0, 3.0],
+                        latency_backend="measure", search_steps=30, seed=0)
+    # family produced in one run, each guaranteeing its target
+    assert set(res.variants) == {1.5, 2.0, 3.0}
+    for t, v in res.variants.items():
+        assert v.speedup >= t - 1e-6
+        # accuracy degrades gracefully from the dense calib loss
+        assert v.calib_loss < res.dense_loss + 0.6, (t, v.calib_loss)
+    # monotone-ish family: 3x no better than 1.5x
+    assert res.variants[3.0].calib_loss >= \
+        res.variants[1.5].calib_loss - 0.05
+
+    # shrink the 2x model and check it is really smaller AND faster on CPU
+    v = res.variants[2.0]
+    pm = shrink(tiny_cfg, v.params, res.db, v.assignment)
+    dense_n = sum(x.size for x in jax.tree.leaves(params))
+    assert pm.num_params() < 0.9 * dense_n
+
+    tokens = tiny_calib[0]["tokens"]
+    f_dense = jax.jit(lambda t: forward(tiny_cfg, params, t)["logits"])
+    f_pruned = jax.jit(lambda t: forward_pruned(pm, t))
+    jax.block_until_ready(f_dense(tokens))
+    jax.block_until_ready(f_pruned(tokens))
+
+    def timeit(f):
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = f(tokens)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    t_dense, t_pruned = timeit(f_dense), timeit(f_pruned)
+    assert t_pruned < t_dense * 1.05, (t_dense, t_pruned)
+    # logits agree between masked and shrunk execution
+    np.testing.assert_allclose(
+        np.asarray(forward(tiny_cfg, v.params, tokens)["logits"]),
+        np.asarray(forward_pruned(pm, tokens)), atol=5e-2, rtol=5e-2)
+
+
+def test_gradual_pipeline_recovers(trained_tiny, tiny_cfg, tiny_calib,
+                                   tmp_path):
+    params, _ = trained_tiny
+    data = synthetic_stream(tiny_cfg, 16, 64, seed=11)
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2, total_steps=20,
+                       distill_logit=1.0, distill_token=0.5)
+    variants = gradual_prune(
+        tiny_cfg, params, ENV, [1.5, 2.0], data, tiny_calib, tcfg=tcfg,
+        finetune_steps=20, search_steps=15, ckpt_dir=str(tmp_path))
+    assert [v.target for v in variants] == [1.5, 2.0]
+    for v in variants:
+        assert v.achieved >= v.target - 1e-6
+        # finetuning with distillation should not blow the loss up
+        assert v.loss_after_ft <= v.loss_before_ft + 0.1
+        # exported shrunk model exists and is smaller
+        assert v.pruned.encoder_params() > 0
