@@ -15,9 +15,16 @@ used V100/A100 measurements (DESIGN.md §3).
   fig2    gradual pruning family (reduced)
   kernels Pallas kernel vs ref oracle timing/correctness
   roofline  reads results/dryrun/*.json (deliverable g)
+  db_build  batched (grouped-vmap) database construction vs the serial
+            per-module path on a CPU-scaled BERT-base; writes BENCH_db.json
+  spdy_eval device-resident SnapshotCache assignment stitching vs host
+            per-module snapshot uploads; appended to BENCH_db.json
+
+Run a subset with ``python benchmarks/run.py db_build spdy_eval``.
 """
 from __future__ import annotations
 
+import functools
 import glob
 import json
 import os
@@ -30,9 +37,10 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import GPT2_SMALL
+from repro.configs import BERT_BASE, GPT2_SMALL
 from repro.configs.base import TrainConfig
-from repro.core.database import apply_assignment, build_database
+from repro.core.database import (SnapshotCache, apply_assignment,
+                                 build_database)
 from repro.core.hessian import collect_hessians
 from repro.core.latency import build_table
 from repro.core.magnitude import baseline_database, uniform_assignment
@@ -270,6 +278,213 @@ def bench_kernels():
     row("kernel_ssd_scan", us, "interpret-mode, vs recurrence in tests")
 
 
+# CPU-scaled BERT-base: the paper's 12-layer encoder with widths shrunk so
+# database construction finishes in benchmark time on CPU. The batching
+# dimension that matters (12 attn + 12 ffn modules in 2 shape groups) is
+# preserved at full scale.
+BERT_BENCH = BERT_BASE.replace(
+    name="bert-base-cpu", d_model=96, num_heads=6, num_kv_heads=6,
+    head_dim=16, d_ff=384, vocab_size=512, max_position=128,
+    dtype="float32")
+
+
+# Frozen copy of the SEED database inner loop (commit 1f7c91d): one module
+# at a time, all n diagonal blocks re-inverted with jnp.linalg.inv at every
+# removal step, full snapshot-stack re-masked every step. Kept verbatim here
+# as the db_build baseline so the engine speedup is tracked across PRs.
+@functools.partial(jax.jit, static_argnames=("group_size", "n_remove",
+                                             "levels"))
+def _seed_prune_structured(W, Hinv, *, group_size, n_remove, levels):
+    gs = group_size
+    d_in, d_out = W.shape
+    n = d_in // gs
+    levels_arr = jnp.asarray(levels, jnp.int32)
+    n_levels = len(levels)
+    W = W.astype(jnp.float32)
+    Hinv = Hinv.astype(jnp.float32)
+    snaps0 = jnp.zeros((n_levels, d_in, d_out), jnp.float32)
+    errs0 = jnp.zeros((n_levels,), jnp.float32)
+    has0 = levels_arr == 0
+    snaps0 = jnp.where(has0[:, None, None], W[None], snaps0)
+
+    def body(i, carry):
+        W, Hinv, removed, cum_err, snaps, errs, order = carry
+        blocks = Hinv.reshape(n, gs, n, gs)[jnp.arange(n), :,
+                                            jnp.arange(n), :]
+        eye = jnp.eye(gs, dtype=jnp.float32)
+        safe = jnp.where(removed[:, None, None], eye[None], blocks)
+        K = jnp.linalg.inv(safe)
+        Wb = W.reshape(n, gs, d_out)
+        scores = jnp.einsum("gic,gij,gjc->g", Wb, K, Wb)
+        scores = jnp.where(removed, jnp.inf, jnp.maximum(scores, 0.0))
+        s = jnp.argmin(scores)
+        rows = s * gs + jnp.arange(gs)
+        HcolS = Hinv[:, rows]
+        Ks = K[s]
+        WS = W[rows, :]
+        W_new = W - HcolS @ (Ks @ WS)
+        Hinv_new = Hinv - HcolS @ (Ks @ HcolS.T)
+        cum_err = cum_err + scores[s]
+        removed = removed.at[s].set(True)
+        order = order.at[i].set(s.astype(jnp.int32))
+        row_keep = jnp.repeat(~removed, gs).astype(jnp.float32)
+        W_new = W_new * row_keep[:, None]
+        Hinv_new = Hinv_new * row_keep[:, None] * row_keep[None, :]
+        match = levels_arr == (i + 1)
+        snaps = jnp.where(match[:, None, None], W_new[None], snaps)
+        errs = jnp.where(match, cum_err, errs)
+        return (W_new, Hinv_new, removed, cum_err, snaps, errs, order)
+
+    init = (W, Hinv, jnp.zeros((n,), bool), jnp.zeros((), jnp.float32),
+            snaps0, errs0, jnp.zeros((n_remove,), jnp.int32))
+    _, _, _, _, snaps, errs, order = jax.lax.fori_loop(0, n_remove, body,
+                                                       init)
+    return snaps, errs, order
+
+
+def _seed_build_database(cfg, params, hessians):
+    """Seed build_database: serial per-module Algorithm-1 runs."""
+    from repro.core.obs import build_hessian, module_drop_error
+    from repro.core.structures import get_matrix, level_grid
+    out = {}
+    for mod in registry(cfg):
+        W = get_matrix(cfg, params, mod).astype(jnp.float32)
+        H = build_hessian(hessians[mod.name], 1e-4)
+        Hinv = jnp.linalg.inv(H)
+        levels = level_grid(mod)
+        snaps, errs, order = _seed_prune_structured(
+            W, Hinv, group_size=mod.group_size, n_remove=max(levels),
+            levels=tuple(levels))
+        base = float(module_drop_error(W, hessians[mod.name]))
+        out[mod.name] = (np.asarray(snaps, np.float16), np.asarray(errs),
+                         np.asarray(order), base)
+    return out
+
+
+def _bench_db_setup():
+    if "db_bench" in _STATE:
+        return _STATE["db_bench"]
+    from repro.core.structures import registry as _registry
+    from repro.models import model_init as _model_init
+    cfg = BERT_BENCH
+    params, _ = _model_init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    hess = {}
+    for m in _registry(cfg):
+        X = rng.standard_normal((2 * m.d_in + 64, m.d_in))
+        hess[m.name] = jnp.asarray(X.T @ X / len(X), jnp.float32)
+    _STATE["db_bench"] = (cfg, params, hess)
+    return _STATE["db_bench"]
+
+
+def _write_bench_db(update: dict):
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_db.json")
+    rec = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+    rec.update(update)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def bench_db_build():
+    """Database construction wall-clock: the batched engine (grouped vmap,
+    Cholesky block solves, fused downdate, slot snapshots) vs the frozen
+    seed per-module path, plus the refactored serial path for reference.
+    All warm (compile excluded); includes the host float16 conversion."""
+    cfg, params, hess = _bench_db_setup()
+    mods = registry(cfg)
+    n_groups = len({(m.group_size, m.n_structures) for m in mods})
+
+    def run_seed():
+        return _seed_build_database(cfg, params, hess)
+
+    def run_serial():
+        return build_database(cfg, params, hess, batched=False)
+
+    def run_batched():
+        return build_database(cfg, params, hess, batched=True)
+
+    run_batched()                       # warm (compile)
+    t0 = time.perf_counter()
+    db = run_batched()
+    t_batched = time.perf_counter() - t0
+    run_serial()                        # warm (compile)
+    t0 = time.perf_counter()
+    db_s = run_serial()
+    t_serial = time.perf_counter() - t0
+    run_seed()                          # warm (compile)
+    t0 = time.perf_counter()
+    db_seed = run_seed()
+    t_seed = time.perf_counter() - t0
+    _STATE["db_bench_db"] = db
+
+    orders_equal = all(
+        bool(np.all(db[m.name].order == db_s[m.name].order))
+        and bool(np.all(db[m.name].order == db_seed[m.name][2]))
+        for m in mods)
+    snap_diff = max(
+        float(np.max(np.abs(db[m.name].snapshots.astype(np.float32)
+                            - db_seed[m.name][0].astype(np.float32))))
+        for m in mods)
+    speedup = t_seed / max(t_batched, 1e-12)
+    _write_bench_db({"db_build": {
+        "config": cfg.name, "modules": len(mods), "groups": n_groups,
+        "seed_per_module_s": t_seed, "refactored_serial_s": t_serial,
+        "batched_s": t_batched, "speedup_vs_seed": speedup,
+        "speedup_vs_refactored_serial": t_serial / max(t_batched, 1e-12),
+        "orders_equal": orders_equal, "max_snapshot_diff": snap_diff}})
+    row("db_build", t_batched * 1e6,
+        f"seed={t_seed*1e3:.0f}ms serial={t_serial*1e3:.0f}ms "
+        f"batched={t_batched*1e3:.0f}ms speedup={speedup:.1f}x "
+        f"orders_equal={orders_equal} snapdiff={snap_diff:.1e}")
+
+
+def bench_spdy_eval():
+    """Per-candidate assignment stitching: device-resident SnapshotCache
+    gather vs ~|modules| host snapshot uploads (the SPDY eval hot path)."""
+    from repro.core.structures import level_grid
+    cfg, params, hess = _bench_db_setup()
+    db = _STATE.get("db_bench_db")
+    if db is None:
+        db = build_database(cfg, params, hess)
+    cache = SnapshotCache(cfg, db)
+    mods = registry(cfg)
+    rng = np.random.default_rng(1)
+    cands = [{m.name: int(rng.choice(level_grid(m))) for m in mods}
+             for _ in range(32)]
+
+    def run_host():
+        for a in cands:
+            jax.block_until_ready(
+                apply_assignment(cfg, params, db, a)["layers"]["ffn"]["wd"])
+
+    def run_device():
+        for a in cands:
+            jax.block_until_ready(
+                apply_assignment(cfg, params, db, a,
+                                 cache=cache)["layers"]["ffn"]["wd"])
+
+    run_device()  # warm
+    t0 = time.perf_counter()
+    run_device()
+    t_dev = (time.perf_counter() - t0) / len(cands)
+    run_host()
+    t0 = time.perf_counter()
+    run_host()
+    t_host = (time.perf_counter() - t0) / len(cands)
+    speedup = t_host / max(t_dev, 1e-12)
+    _write_bench_db({"spdy_eval": {
+        "config": cfg.name, "candidates": len(cands),
+        "host_us_per_candidate": t_host * 1e6,
+        "device_us_per_candidate": t_dev * 1e6, "speedup": speedup}})
+    row("spdy_eval", t_dev * 1e6,
+        f"host={t_host*1e6:.0f}us device={t_dev*1e6:.0f}us "
+        f"speedup={speedup:.1f}x")
+
+
 def bench_roofline():
     files = sorted(glob.glob(os.path.join(
         os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
@@ -290,19 +505,43 @@ def bench_roofline():
         f"ok={ok} fail={fail} worst_mfu={worst[1]:.4f}@{worst[0]}")
 
 
-def main() -> None:
+BENCHES = {
+    "table7": bench_table7_latency_table,
+    "table3": bench_table3_mlp_speedups,
+    "table2": bench_table2_oneshot,
+    "table4": bench_table4_calibration,
+    "table1": bench_table1_throughput_vs_latency,
+    "table8": bench_table8_speedup_guarantee,
+    "fig5": bench_fig5_scaling_law,
+    "fig2": bench_fig2_gradual,
+    "kernels": bench_kernels,
+    "db_build": bench_db_build,
+    "spdy_eval": bench_spdy_eval,
+    "roofline": bench_roofline,
+}
+
+# benches that run on synthetic weights/hessians; no tiny-GPT2 training
+_NO_TRAIN = {"table7", "table3", "kernels", "db_build", "spdy_eval",
+             "roofline"}
+
+
+def main(argv=None) -> None:
+    args = list(argv if argv is not None else sys.argv[1:])
+    flags = [a for a in args if a.startswith("-")]
+    if flags:
+        raise SystemExit(f"unrecognized option(s) {flags}; "
+                         f"usage: run.py [{' | '.join(sorted(BENCHES))}]")
+    names = args
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s) {unknown}; "
+                         f"available: {sorted(BENCHES)}")
+    selected = names or list(BENCHES)
     print("name,us_per_call,derived")
-    trained_model()
-    bench_table7_latency_table()
-    bench_table3_mlp_speedups()
-    bench_table2_oneshot()
-    bench_table4_calibration()
-    bench_table1_throughput_vs_latency()
-    bench_table8_speedup_guarantee()
-    bench_fig5_scaling_law()
-    bench_fig2_gradual()
-    bench_kernels()
-    bench_roofline()
+    if any(n not in _NO_TRAIN for n in selected):
+        trained_model()
+    for n in selected:
+        BENCHES[n]()
 
 
 if __name__ == "__main__":

@@ -2,17 +2,30 @@
 ZipLM-updated weight snapshot, squared error, and SPDY prior at each
 sparsity level — produced in a single run per module, exploiting the
 one-structure-at-a-time nature of Algorithm 1.
+
+Construction is batched: modules are grouped by identical
+``(group_size, n_structures, d_out, levels)`` signature — all L attention
+layers share one shape, all L FFN layers another — and each group runs
+Algorithm 1 under ``jax.vmap`` (obs.prune_structured_batched), so
+``build_database`` issues a handful of compiled calls instead of ~2L.
+``batched=False`` keeps the serial per-module path as the equivalence
+reference.
+
+``SnapshotCache`` keeps the stacked snapshots device-resident so SPDY's
+per-candidate ``apply_assignment`` is one gather + jitted stitch per
+module kind instead of ~|modules| host->device transfers.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .obs import build_hessian, module_drop_error, prune_structured
+from .obs import (build_hessian, module_drop_error, module_drop_errors,
+                  prune_structured, prune_structured_batched)
 from .structures import (PrunableModule, get_matrix, level_grid, registry,
                          set_matrix)
 
@@ -38,6 +51,21 @@ class ModuleDB:
                            if g not in gone])
 
 
+def _finish_module_db(mod: PrunableModule, levels: np.ndarray,
+                      snapshots16: np.ndarray, errors_raw: np.ndarray,
+                      base: float, order: np.ndarray) -> ModuleDB:
+    """Host-side post-processing shared by the serial and batched paths."""
+    errs = np.asarray(errors_raw, np.float64) / 2.0  # H had the paper's 2x
+    errs[-1] = base if levels[-1] == mod.n_structures else errs[-1]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        priors = np.sqrt(np.maximum(errs, 0.0) / max(base, 1e-30))
+    priors = np.clip(np.nan_to_num(priors, nan=1.0), 0.0, 1.0)
+    return ModuleDB(mod=mod, levels=np.asarray(levels),
+                    snapshots=np.asarray(snapshots16, np.float16),
+                    errors=errs, priors=priors, base_norm=base,
+                    order=np.asarray(order))
+
+
 def build_module_db(cfg, params, mod: PrunableModule, h_raw,
                     damp: float = 1e-4) -> ModuleDB:
     W = get_matrix(cfg, params, mod).astype(jnp.float32)
@@ -48,35 +76,157 @@ def build_module_db(cfg, params, mod: PrunableModule, h_raw,
     res = prune_structured(W, Hinv, group_size=mod.group_size,
                            n_remove=n_remove, levels=tuple(levels))
     base = float(module_drop_error(W, h_raw))
-    errs = np.asarray(res.errors, np.float64) / 2.0  # H had the paper's 2x
-    errs[-1] = base if levels[-1] == mod.n_structures else errs[-1]
-    with np.errstate(divide="ignore", invalid="ignore"):
-        priors = np.sqrt(np.maximum(errs, 0.0) / max(base, 1e-30))
-    priors = np.clip(np.nan_to_num(priors, nan=1.0), 0.0, 1.0)
-    return ModuleDB(mod=mod, levels=np.asarray(levels),
-                    snapshots=np.asarray(res.snapshots, np.float16),
-                    errors=errs, priors=priors, base_norm=base,
-                    order=np.asarray(res.order))
+    return _finish_module_db(mod, np.asarray(levels),
+                             np.asarray(res.snapshots, np.float16),
+                             np.asarray(res.errors), base,
+                             np.asarray(res.order))
+
+
+def group_modules(cfg, params, mods: List[PrunableModule]
+                  ) -> List[Tuple[tuple, List[PrunableModule]]]:
+    """Group modules whose Algorithm-1 run compiles to the same program:
+    identical (group_size, n_structures, d_out, levels)."""
+    groups: Dict[tuple, List[PrunableModule]] = {}
+    for mod in mods:
+        d_out = get_matrix(cfg, params, mod).shape[1]
+        key = (mod.group_size, mod.n_structures, d_out,
+               tuple(level_grid(mod)))
+        groups.setdefault(key, []).append(mod)
+    return list(groups.items())
 
 
 def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
-                   damp: float = 1e-4, verbose: bool = False
-                   ) -> Dict[str, ModuleDB]:
+                   damp: float = 1e-4, verbose: bool = False,
+                   batched: bool = True, use_kernel: bool = False,
+                   max_batch: int = 16) -> Dict[str, ModuleDB]:
+    """max_batch bounds how many modules of one shape group run under a
+    single vmap, capping device memory at max_batch x (Hinv + snapshot
+    stack) instead of the whole group (L, or L*E for MoE)."""
+    mods = registry(cfg)
     db: Dict[str, ModuleDB] = {}
-    for mod in registry(cfg):
-        db[mod.name] = build_module_db(cfg, params, mod, hessians[mod.name],
-                                       damp)
-        if verbose:
-            p = db[mod.name].priors
-            print(f"  db {mod.name}: levels={len(p)} "
+    if not batched:
+        for mod in mods:
+            db[mod.name] = build_module_db(cfg, params, mod,
+                                           hessians[mod.name], damp)
+    else:
+        for key, gmods in group_modules(cfg, params, mods):
+            gs, n, _, levels = key
+            for lo in range(0, len(gmods), max_batch):
+                chunk = gmods[lo:lo + max_batch]
+                Ws = jnp.stack([get_matrix(cfg, params, m)
+                                .astype(jnp.float32) for m in chunk])
+                Hraw = jnp.stack([jnp.asarray(hessians[m.name],
+                                              jnp.float32) for m in chunk])
+                H = build_hessian(Hraw, damp)
+                Hinv = jnp.linalg.inv(H)
+                res = prune_structured_batched(
+                    Ws, Hinv, group_size=gs, n_remove=max(levels),
+                    levels=levels, use_kernel=use_kernel)
+                bases = module_drop_errors(Ws, Hraw)
+                # one host transfer per chunk (float16), not per module
+                snaps16 = np.asarray(res.snapshots.astype(jnp.float16))
+                errs = np.asarray(res.errors)
+                orders = np.asarray(res.order)
+                bases = np.asarray(bases, np.float64)
+                lv = np.asarray(levels)
+                for i, m in enumerate(chunk):
+                    db[m.name] = _finish_module_db(
+                        m, lv, snaps16[i], errs[i], float(bases[i]),
+                        orders[i])
+        db = {m.name: db[m.name] for m in mods}  # registry order
+    if verbose:
+        for name, mdb in db.items():
+            p = mdb.priors
+            print(f"  db {name}: levels={len(p)} "
                   f"p[1]={p[min(1, len(p)-1)]:.4f} p[-2]={p[-2]:.4f}")
     return db
 
 
+# ----------------------------------------------------------------------
+# device-resident snapshot cache for SPDY evaluation
+# ----------------------------------------------------------------------
+
+_PARAM_PATH = {"attn": ("attn", "wo"), "ssm": ("ssm", "out_proj"),
+               "moe": ("moe", "wd"), "ffn": ("ffn", "wd")}
+
+
+@jax.jit
+def _stitch_layers(leaf, snaps, lvl_idx, layer_idx):
+    """leaf: (L, d_in, d_out) param stack; snaps: (M, n_lvl, d_in, d_out)."""
+    w = snaps[jnp.arange(snaps.shape[0]), lvl_idx].astype(leaf.dtype)
+    return leaf.at[layer_idx].set(w)
+
+
+@jax.jit
+def _stitch_experts(leaf, snaps, lvl_idx, layer_idx, expert_idx):
+    """leaf: (L, E, d_in, d_out); snaps: (M, n_lvl, d_in, d_out)."""
+    w = snaps[jnp.arange(snaps.shape[0]), lvl_idx].astype(leaf.dtype)
+    return leaf.at[layer_idx, expert_idx].set(w)
+
+
+class SnapshotCache:
+    """Device-resident stacked database snapshots with a jitted stitch.
+
+    Built once from a database; ``apply`` assembles any level assignment
+    as one gather + scatter per module kind, entirely on device — the hot
+    path of SPDY's ~200 eval-with-loss candidates, which previously
+    round-tripped every module's float16 snapshot through the host.
+    """
+
+    def __init__(self, cfg, db: Dict[str, ModuleDB]):
+        self.cfg = cfg
+        self._kinds: Dict[str, dict] = {}
+        by_kind: Dict[str, List[ModuleDB]] = {}
+        for mdb in db.values():
+            by_kind.setdefault(mdb.mod.kind, []).append(mdb)
+        for kind, mdbs in by_kind.items():
+            self._kinds[kind] = {
+                "names": [m.mod.name for m in mdbs],
+                "levels": np.asarray(mdbs[0].levels),
+                "layer_idx": jnp.asarray([m.mod.layer for m in mdbs],
+                                         jnp.int32),
+                "expert_idx": jnp.asarray([m.mod.expert for m in mdbs],
+                                          jnp.int32),
+                # (M, n_levels, d_in, d_out) float16, uploaded once
+                "snaps": jnp.asarray(np.stack([m.snapshots for m in mdbs])),
+            }
+
+    def covers(self, assignment: Dict[str, int]) -> bool:
+        return all(n in assignment
+                   for e in self._kinds.values() for n in e["names"])
+
+    def apply(self, params, assignment: Dict[str, int]):
+        """Device-side equivalent of apply_assignment for a full
+        per-module level assignment."""
+        new = jax.tree.map(lambda a: a, params)  # shallow-ish copy of dicts
+        layers = new["layers"]
+        for kind, e in self._kinds.items():
+            lvl = np.asarray([assignment[n] for n in e["names"]])
+            lvl_idx = jnp.asarray(np.searchsorted(e["levels"], lvl),
+                                  jnp.int32)
+            grp, leaf_key = _PARAM_PATH[kind]
+            leaf = layers[grp][leaf_key]
+            if kind == "moe":
+                leaf = _stitch_experts(leaf, e["snaps"], lvl_idx,
+                                       e["layer_idx"], e["expert_idx"])
+            else:
+                leaf = _stitch_layers(leaf, e["snaps"], lvl_idx,
+                                      e["layer_idx"])
+            layers[grp][leaf_key] = leaf
+        return new
+
+
 def apply_assignment(cfg, params, db: Dict[str, ModuleDB],
-                     assignment: Dict[str, int]):
+                     assignment: Dict[str, int],
+                     cache: Optional[SnapshotCache] = None):
     """Stitch the database snapshots for a per-module level assignment into
-    the parameter tree (masked model; shrink materializes real speedup)."""
+    the parameter tree (masked model; shrink materializes real speedup).
+
+    With a SnapshotCache the stitch is a device-side gather; without one
+    it falls back to per-module host snapshot uploads.
+    """
+    if cache is not None and cache.covers(assignment):
+        return cache.apply(params, assignment)
     new = params
     for name, removed in assignment.items():
         mdb = db[name]

@@ -1,11 +1,16 @@
 """Calibration: run the model over calibration batches with capture mode on
 and accumulate per-module Hessians ``X^T X`` (fp32, streamed over batches).
 
-The inner accumulation is the Pallas ``hessian_accum`` kernel's jnp twin;
-``use_kernel=True`` routes through the kernel (interpret mode on CPU).
+One jitted, buffer-donated step consumes a batch and updates *all* module
+Hessians at once — the forward pass and every ``X^T X`` fuse into a single
+compiled call per batch, instead of a Python loop of one dispatch per
+module. The inner accumulation is the Pallas ``hessian_accum`` kernel's
+jnp twin; ``use_kernel=True`` routes through the kernel (interpret mode
+on CPU).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -27,33 +32,48 @@ def xtx(x: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
     return x.T @ x
 
 
-def collect_hessians(cfg, params, batches: List[Dict], *,
-                     use_kernel: bool = False) -> Dict[str, jnp.ndarray]:
-    """Returns {module_name: H_raw = sum X^T X} over calibration batches."""
+@functools.lru_cache(maxsize=16)
+def _fused_step(cfg, use_kernel: bool):
+    """Compiled once per (cfg, use_kernel) — gradual_prune calls
+    collect_hessians per target and must not re-trace the forward."""
     mods = registry(cfg)
-    hessians: Dict[str, jnp.ndarray] = {}
-    n_samples: Dict[str, float] = {}
 
-    @jax.jit
-    def captured(params, tokens, frontend):
-        out = forward(cfg, params, tokens, frontend_embeds=frontend,
-                      capture=True)
-        return out["captures"]
-
-    for batch in batches:
-        caps = captured(params, batch["tokens"], batch.get("frontend"))
+    def _step(hessians, counts, params, tokens, frontend):
+        caps = forward(cfg, params, tokens, frontend_embeds=frontend,
+                       capture=True)["captures"]
+        new_h: Dict[str, jnp.ndarray] = {}
+        new_c: Dict[str, jnp.ndarray] = {}
         for mod in mods:
             x, valid = get_capture(caps, mod)
-            h = xtx(x, valid, use_kernel=use_kernel)
-            if mod.name in hessians:
-                hessians[mod.name] = hessians[mod.name] + h
-            else:
-                hessians[mod.name] = h
-            n = (float(x.shape[0]) if valid is None
-                 else float(jnp.sum(valid)))
-            n_samples[mod.name] = n_samples.get(mod.name, 0.0) + n
+            new_h[mod.name] = hessians[mod.name] \
+                + xtx(x, valid, use_kernel=use_kernel)
+            n = (jnp.float32(x.shape[0]) if valid is None
+                 else jnp.sum(valid).astype(jnp.float32))
+            new_c[mod.name] = counts[mod.name] + n
+        return new_h, new_c
+
+    # donate the accumulators so each batch updates them in place
+    # (donation is a no-op on CPU and would only emit warnings there)
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_step, donate_argnums=donate)
+
+
+def collect_hessians(cfg, params, batches: List[Dict], *,
+                     use_kernel: bool = False) -> Dict[str, jnp.ndarray]:
+    """Returns {module_name: H_raw = sum X^T X / n_samples} over batches."""
+    if not batches:
+        raise ValueError("collect_hessians needs at least one calibration "
+                         "batch (got an empty list)")
+    mods = registry(cfg)
+    step = _fused_step(cfg, use_kernel)
+
+    hessians = {m.name: jnp.zeros((m.d_in, m.d_in), jnp.float32)
+                for m in mods}
+    counts = {m.name: jnp.zeros((), jnp.float32) for m in mods}
+    for batch in batches:
+        hessians, counts = step(hessians, counts, params, batch["tokens"],
+                                batch.get("frontend"))
 
     # normalize by sample count (keeps damping scale-invariant)
-    for k in hessians:
-        hessians[k] = hessians[k] / max(n_samples[k], 1.0)
-    return hessians
+    counts = jax.device_get(counts)
+    return {k: hessians[k] / max(float(counts[k]), 1.0) for k in hessians}

@@ -11,15 +11,29 @@ row-groups ("structures"), remove structures one at a time:
 Each removal costs O(|S| d^2) instead of an O(d^3) re-inversion. Snapshots
 of ``W`` are recorded at the requested sparsity levels, building the
 per-layer database consumed by the SPDY search.
+
+The inner step factors the (gs, gs) diagonal blocks of ``H^-1`` with a
+symmetric Cholesky instead of a general inverse — scores come from one
+triangular solve (``||L^-1 W_S||^2``), the update from two ``cho_solve``s
+— and the rank-``gs`` W/Hinv downdate is expressed through a single fused
+primitive (``kernels.ref.obs_downdate_ref``, or the Pallas twin
+``kernels.ops.obs_downdate`` when ``use_kernel=True``) so the (d, d)
+outer-product intermediate never materializes separately from the update.
+
+``prune_structured_batched`` vmaps the whole loop over a stack of modules
+with identical (d_in, d_out, group_size, levels) signature: all L layers
+of a group prune simultaneously, turning ~L small matmuls per step into
+one batched matmul per step (the database-construction hot path).
 """
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.scipy.linalg import cho_solve, solve_triangular
 
 
 class PruneResult(NamedTuple):
@@ -30,11 +44,13 @@ class PruneResult(NamedTuple):
 
 
 def build_hessian(xtx: jnp.ndarray, damp_frac: float = 1e-4) -> jnp.ndarray:
-    """H = 2 X^T X + lambda I with relative damping."""
-    d = xtx.shape[0]
+    """H = 2 X^T X + lambda I with relative damping (batched over any
+    leading dims)."""
+    d = xtx.shape[-1]
     h = 2.0 * xtx
-    damp = damp_frac * jnp.mean(jnp.diag(h)) + 1e-12
-    return h + damp * jnp.eye(d, dtype=h.dtype)
+    diag = jnp.diagonal(h, axis1=-2, axis2=-1)
+    damp = damp_frac * jnp.mean(diag, axis=-1) + 1e-12
+    return h + damp[..., None, None] * jnp.eye(d, dtype=h.dtype)
 
 
 def _diag_blocks(m: jnp.ndarray, gs: int) -> jnp.ndarray:
@@ -43,47 +59,69 @@ def _diag_blocks(m: jnp.ndarray, gs: int) -> jnp.ndarray:
     return m.reshape(n, gs, n, gs)[jnp.arange(n), :, jnp.arange(n), :]
 
 
-@functools.partial(jax.jit, static_argnames=("group_size", "n_remove",
-                                             "levels"))
-def prune_structured(W: jnp.ndarray, Hinv: jnp.ndarray, *, group_size: int,
-                     n_remove: int, levels: Tuple[int, ...]) -> PruneResult:
-    """Run Algorithm 1, snapshotting W after `levels[i]` removals.
+def _prune_core(W: jnp.ndarray, Hinv: jnp.ndarray, *, group_size: int,
+                n_remove: int, levels: Tuple[int, ...],
+                use_kernel: bool = False,
+                interpret: Optional[bool] = None) -> PruneResult:
+    """Algorithm 1 body — un-jitted so it can be vmapped over a module
+    stack (see prune_structured / prune_structured_batched)."""
+    from ..kernels import ref as kref
 
-    levels must be ascending; level 0 (dense) is always implicit in
-    snapshots[0] if levels[0] == 0.
-    """
     gs = group_size
     d_in, d_out = W.shape
     n = d_in // gs
-    levels_arr = jnp.asarray(levels, jnp.int32)
     n_levels = len(levels)
 
     W = W.astype(jnp.float32)
     Hinv = Hinv.astype(jnp.float32)
 
-    snaps0 = jnp.zeros((n_levels, d_in, d_out), jnp.float32)
-    errs0 = jnp.zeros((n_levels,), jnp.float32)
-    # dense snapshot for any level == 0
-    has0 = levels_arr == 0
-    snaps0 = jnp.where(has0[:, None, None], W[None], snaps0)
+    # levels is static: precompute which snapshot slot (if any) each step
+    # writes; non-level steps write to a scrap slot n_levels, so the body
+    # stores one (d_in, d_out) slice instead of re-masking the whole
+    # (n_levels, d_in, d_out) stack every step.
+    slot_np = np.full((n_remove + 1,), n_levels, np.int32)
+    for idx, lvl in enumerate(levels):
+        slot_np[lvl] = idx
+    slot_arr = jnp.asarray(slot_np)
+
+    snaps0 = jnp.zeros((n_levels + 1, d_in, d_out), jnp.float32)
+    errs0 = jnp.zeros((n_levels + 1,), jnp.float32)
+    if levels[0] == 0:  # dense snapshot
+        snaps0 = snaps0.at[0].set(W)
 
     def body(i, carry):
         W, Hinv, removed, cum_err, snaps, errs, order = carry
-        blocks = _diag_blocks(Hinv, gs)                     # (n, gs, gs)
-        eye = jnp.eye(gs, dtype=jnp.float32)
-        safe = jnp.where(removed[:, None, None], eye[None], blocks)
-        K = jnp.linalg.inv(safe)                            # (n, gs, gs)
-        Wb = W.reshape(n, gs, d_out)
-        scores = jnp.einsum("gic,gij,gjc->g", Wb, K, Wb)
-        scores = jnp.where(removed, jnp.inf, jnp.maximum(scores, 0.0))
-        s = jnp.argmin(scores)
-
-        rows = s * gs + jnp.arange(gs)
-        HcolS = Hinv[:, rows]                               # (d_in, gs)
-        Ks = K[s]
-        WS = W[rows, :]                                     # (gs, d_out)
-        W_new = W - HcolS @ (Ks @ WS)
-        Hinv_new = Hinv - HcolS @ (Ks @ HcolS.T)
+        if gs == 1:
+            # scalar structures: the (1,1) block solve is a division —
+            # no factorization needed
+            diag = jnp.diagonal(Hinv)                       # (n,)
+            safe = jnp.where(removed, 1.0, diag)
+            scores = jnp.sum(W * W, axis=1) / safe
+            scores = jnp.where(removed, jnp.inf,
+                               jnp.maximum(scores, 0.0))
+            s = jnp.argmin(scores)
+            HcolS = jax.lax.dynamic_slice_in_dim(Hinv, s, 1, 1)  # (d, 1)
+            WS = jax.lax.dynamic_slice_in_dim(W, s, 1, 0)   # (1, d_out)
+            inv_s = 1.0 / safe[s]
+            KsWS = WS * inv_s                               # (1, d_out)
+            KsHcolT = HcolS.T * inv_s                       # (1, d_in)
+        else:
+            blocks = _diag_blocks(Hinv, gs)                 # (n, gs, gs)
+            eye = jnp.eye(gs, dtype=jnp.float32)
+            safe = jnp.where(removed[:, None, None], eye[None], blocks)
+            # symmetric PD blocks: Cholesky + triangular solve, not inv
+            Lc = jnp.linalg.cholesky(safe)                  # (n, gs, gs)
+            Wb = W.reshape(n, gs, d_out)
+            V = solve_triangular(Lc, Wb, lower=True)        # L^-1 W_S
+            scores = jnp.sum(V * V, axis=(1, 2))
+            scores = jnp.where(removed, jnp.inf,
+                               jnp.maximum(scores, 0.0))
+            s = jnp.argmin(scores)
+            HcolS = jax.lax.dynamic_slice_in_dim(Hinv, s * gs, gs, 1)
+            WS = jax.lax.dynamic_slice_in_dim(W, s * gs, gs, 0)
+            chol_s = (jax.lax.dynamic_slice_in_dim(Lc, s, 1, 0)[0], True)
+            KsWS = cho_solve(chol_s, WS)                    # (gs, d_out)
+            KsHcolT = cho_solve(chol_s, HcolS.T)            # (gs, d_in)
 
         cum_err = cum_err + scores[s]
         removed = removed.at[s].set(True)
@@ -91,23 +129,71 @@ def prune_structured(W: jnp.ndarray, Hinv: jnp.ndarray, *, group_size: int,
 
         # paper: explicitly re-apply the overall mask — fp downdate creep
         # otherwise repopulates previously-removed rows over many steps
-        row_keep = jnp.repeat(~removed, gs).astype(jnp.float32)
-        W_new = W_new * row_keep[:, None]
-        Hinv_new = Hinv_new * row_keep[:, None] * row_keep[None, :]
+        if gs == 1:
+            row_keep = (~removed).astype(jnp.float32)
+        else:
+            row_keep = jnp.repeat(~removed, gs).astype(jnp.float32)
+        if use_kernel:
+            from ..kernels import ops as kops
+            W_new, Hinv_new = kops.obs_downdate(
+                W, Hinv, HcolS, KsWS, KsHcolT, row_keep, interpret=interpret)
+        else:
+            W_new, Hinv_new = kref.obs_downdate_ref(
+                W, Hinv, HcolS, KsWS, KsHcolT, row_keep)
 
-        # snapshot if (i+1) matches a level
-        match = levels_arr == (i + 1)
-        snaps = jnp.where(match[:, None, None], W_new[None], snaps)
-        errs = jnp.where(match, cum_err, errs)
+        # snapshot if (i+1) matches a level (scrap slot otherwise)
+        slot = slot_arr[i + 1]
+        snaps = jax.lax.dynamic_update_slice(
+            snaps, W_new[None], (slot, jnp.int32(0), jnp.int32(0)))
+        errs = errs.at[slot].set(cum_err)
         return (W_new, Hinv_new, removed, cum_err, snaps, errs, order)
 
     init = (W, Hinv, jnp.zeros((n,), bool), jnp.zeros((), jnp.float32),
             snaps0, errs0, jnp.zeros((n_remove,), jnp.int32))
-    W_f, _, _, _, snaps, errs, order = jax.lax.fori_loop(
+    _, _, _, _, snaps, errs, order = jax.lax.fori_loop(
         0, n_remove, body, init)
 
-    return PruneResult(snapshots=snaps, errors=errs, order=order,
-                       base_norm=jnp.zeros(()))
+    return PruneResult(snapshots=snaps[:n_levels], errors=errs[:n_levels],
+                       order=order, base_norm=jnp.zeros(()))
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "n_remove",
+                                             "levels", "use_kernel",
+                                             "interpret"))
+def prune_structured(W: jnp.ndarray, Hinv: jnp.ndarray, *, group_size: int,
+                     n_remove: int, levels: Tuple[int, ...],
+                     use_kernel: bool = False,
+                     interpret: Optional[bool] = None) -> PruneResult:
+    """Run Algorithm 1, snapshotting W after `levels[i]` removals.
+
+    levels must be ascending; level 0 (dense) is always implicit in
+    snapshots[0] if levels[0] == 0.
+    """
+    return _prune_core(W, Hinv, group_size=group_size, n_remove=n_remove,
+                       levels=levels, use_kernel=use_kernel,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "n_remove",
+                                             "levels", "use_kernel",
+                                             "interpret"))
+def prune_structured_batched(W: jnp.ndarray, Hinv: jnp.ndarray, *,
+                             group_size: int, n_remove: int,
+                             levels: Tuple[int, ...],
+                             use_kernel: bool = False,
+                             interpret: Optional[bool] = None
+                             ) -> PruneResult:
+    """Vmapped Algorithm 1 over a stacked module group.
+
+    W: (L, d_in, d_out), Hinv: (L, d_in, d_in) — every layer of the group
+    runs the same fori_loop in lockstep; one batched matmul per step
+    replaces L serial ones. Returns a PruneResult whose fields carry a
+    leading L dim.
+    """
+    fn = functools.partial(_prune_core, group_size=group_size,
+                           n_remove=n_remove, levels=levels,
+                           use_kernel=use_kernel, interpret=interpret)
+    return jax.vmap(fn)(W, Hinv)
 
 
 def module_drop_error(W: jnp.ndarray, H: jnp.ndarray) -> jnp.ndarray:
@@ -115,6 +201,12 @@ def module_drop_error(W: jnp.ndarray, H: jnp.ndarray) -> jnp.ndarray:
     and the denominator of the SPDY prior p_s)."""
     Wf = W.astype(jnp.float32)
     return jnp.einsum("ic,ij,jc->", Wf, H.astype(jnp.float32), Wf)
+
+
+@jax.jit
+def module_drop_errors(W: jnp.ndarray, H: jnp.ndarray) -> jnp.ndarray:
+    """Batched module_drop_error: (L, d_in, d_out) x (L, d_in, d_in) -> (L,)."""
+    return jax.vmap(module_drop_error)(W, H)
 
 
 def optimal_update_bruteforce(W, H, rows) -> jnp.ndarray:

@@ -15,7 +15,8 @@ import numpy as np
 
 from ..models.model import loss_fn
 from ..runtime.costmodel import InferenceEnv
-from .database import ModuleDB, apply_assignment, build_database
+from .database import (ModuleDB, SnapshotCache, apply_assignment,
+                       build_database)
 from .hessian import collect_hessians
 from .latency import LatencyTable, build_table
 from .spdy import SearchResult, search
@@ -62,6 +63,9 @@ def oneshot_prune(cfg, params, calib_batches: List[dict],
                                 use_kernel=use_kernel)
     table = build_table(cfg, env, backend=latency_backend)
     db = build_database(cfg, params, hessians, damp=damp, verbose=verbose)
+    # device-resident snapshots only pay off for per-candidate loss eval;
+    # without it the final per-target stitch is cheap on the host path
+    cache = SnapshotCache(cfg, db) if eval_with_loss else None
     mods = registry(cfg)
     dense_rt = table.dense_runtime(mods)
 
@@ -71,13 +75,15 @@ def oneshot_prune(cfg, params, calib_batches: List[dict],
     eval_fn = None
     if eval_with_loss:
         def eval_fn(assignment):
-            return loss_eval(apply_assignment(cfg, params, db, assignment))
+            return loss_eval(apply_assignment(cfg, params, db, assignment,
+                                              cache=cache))
 
     variants: Dict[float, PrunedVariant] = {}
     for t in targets:
         res = search(db, table, t, steps=search_steps, eval_fn=eval_fn,
                      seed=seed, verbose=verbose)
-        pruned = apply_assignment(cfg, params, db, res.assignment)
+        pruned = apply_assignment(cfg, params, db, res.assignment,
+                                  cache=cache)
         variants[t] = PrunedVariant(
             target_speedup=t, params=pruned, assignment=res.assignment,
             runtime=res.runtime, speedup=res.speedup,

@@ -16,7 +16,7 @@ import numpy as np
 from ..configs.base import TrainConfig
 from ..models.pruned import PrunedModel
 from ..train.trainer import Trainer
-from .database import apply_assignment, build_database
+from .database import SnapshotCache, apply_assignment, build_database
 from .hessian import collect_hessians
 from .latency import build_table
 from .oneshot import calib_loss_fn
@@ -82,10 +82,12 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
         # re-calibrate on the *current* model (Hessians drift as we prune)
         hessians = collect_hessians(cfg, current, calib_batches)
         db = build_database(cfg, current, hessians)
+        cache = SnapshotCache(cfg, db)
         res = search(db, table, target, steps=search_steps,
                      eval_fn=lambda a: loss_eval(
-                         apply_assignment(cfg, current, db, a)))
-        masked = apply_assignment(cfg, current, db, res.assignment)
+                         apply_assignment(cfg, current, db, a, cache=cache)))
+        masked = apply_assignment(cfg, current, db, res.assignment,
+                                  cache=cache)
         loss_before = loss_eval(masked)
 
         masks = masks_from_assignment(cfg, masked, db, res.assignment)

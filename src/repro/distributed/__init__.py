@@ -1,2 +1,2 @@
 from .sharding import (batch_sharding, cache_shardings, logical_to_pspec,
-                       make_mesh_from_config, param_shardings)
+                       make_mesh, make_mesh_from_config, param_shardings)

@@ -19,10 +19,25 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import MeshConfig
 
 
+def make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` with explicit-Auto axis types where supported.
+
+    ``axis_types`` / ``jax.sharding.AxisType`` only exist on newer jax;
+    older releases treat every axis as Auto already, so omitting the
+    argument there is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    except TypeError:  # AxisType exists but make_mesh lacks the kwarg
+        return jax.make_mesh(shape, axes)
+
+
 def make_mesh_from_config(mc: MeshConfig) -> Mesh:
-    return jax.make_mesh(
-        mc.shape, mc.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mc.axes))
+    return make_mesh(mc.shape, mc.axes)
 
 
 def _axis_size(mesh: Mesh, axes) -> int:

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel
 from .hessian_accum import hessian_accum_kernel
+from .obs_downdate import obs_downdate_kernel
 from .ssd_scan import ssd_intra_chunk_kernel
 
 
@@ -43,6 +44,18 @@ def hessian_accum(x, *, block_d=256, block_n=512, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return hessian_accum_kernel(x, block_d=block_d, block_n=block_n,
                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def obs_downdate(W, Hinv, HcolS, KsWS, KsHcolT, keep, *, block_d=256,
+                 interpret=None):
+    """Fused OBS rank-gs W/Hinv downdate (see kernels.obs_downdate).
+
+    Semantics match kernels.ref.obs_downdate_ref exactly.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return obs_downdate_kernel(W, Hinv, HcolS, KsWS, KsHcolT, keep,
+                               block_d=block_d, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "head_block",

@@ -39,6 +39,36 @@ def hessian_ref(x):
     return xf.T @ xf
 
 
+def obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep):
+    """Fused OBS rank-gs downdate (the jnp oracle of kernels.obs_downdate).
+
+    W:      (d_in, d_out)   current weights
+    Hinv:   (d_in, d_in)    current inverse Hessian
+    HcolS:  (d_in, gs)      Hinv[:, S] for the removed structure S
+    KsWS:   (gs, d_out)     (Hinv[S,S])^-1 W[S,:]
+    KsHcolT:(gs, d_in)      (Hinv[S,S])^-1 Hinv[S,:]
+    keep:   (d_in,)         {0,1} row mask AFTER removing S
+
+    Returns (W - HcolS @ KsWS) and (Hinv - HcolS @ KsHcolT), both with the
+    keep mask re-applied (rows for W, rows+cols for Hinv).
+    """
+    Wf = W.astype(jnp.float32)
+    Hf = Hinv.astype(jnp.float32)
+    A = HcolS.astype(jnp.float32)
+    k = keep.astype(jnp.float32)
+    if A.shape[-1] == 1:
+        # rank-1: broadcasted outer products fuse into the subtract/mask
+        # (a dot_general here would break XLA:CPU elementwise fusion)
+        W_new = (Wf - A * KsWS.astype(jnp.float32)) * k[:, None]
+        Hinv_new = (Hf - A * KsHcolT.astype(jnp.float32)) \
+            * k[:, None] * k[None, :]
+        return W_new, Hinv_new
+    W_new = (Wf - A @ KsWS.astype(jnp.float32)) * k[:, None]
+    Hinv_new = (Hf - A @ KsHcolT.astype(jnp.float32)) \
+        * k[:, None] * k[None, :]
+    return W_new, Hinv_new
+
+
 def ssd_ref(x, dt, A, B, C, initial_state=None):
     """Token-by-token SSD recurrence (the definitionally-correct oracle).
 

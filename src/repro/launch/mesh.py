@@ -6,16 +6,14 @@ and only the dry-run is allowed to force 512 host devices.
 """
 from __future__ import annotations
 
-import jax
-
 from ..configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+from ..distributed.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:

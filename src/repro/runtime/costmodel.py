@@ -40,6 +40,10 @@ class InferenceEnv:
     def tokens(self) -> int:
         return self.batch * (1 if self.mode == "decode" else self.seq)
 
+    def replace(self, **kw) -> "InferenceEnv":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
 
 def _rup(x: int, m: int) -> int:
     return max(m, ((x + m - 1) // m) * m)

@@ -26,10 +26,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distributed.sharding import make_mesh
 from repro.runtime.hlo_analysis import analyze_hlo_text
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 L, M, K = 5, 128, 256
 
 def fn(w, x):

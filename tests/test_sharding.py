@@ -21,7 +21,7 @@ from repro.configs.base import MeshConfig, TrainConfig
 from repro.data import synthetic_stream, calibration_batches
 from repro.distributed.activation import set_activation_context
 from repro.distributed.sharding import (batch_sharding, cache_shardings,
-                                        param_shardings)
+                                        make_mesh, param_shardings)
 from repro.models import model_init, make_batch
 from repro.optim.compression import int8_ef_compress, int8_ef_init
 from repro.train.train_step import (TrainState, make_train_state,
@@ -30,8 +30,7 @@ from repro.checkpoint.manager import CheckpointManager
 
 out = {}
 mc = MeshConfig((4, 2), ("data", "model"))
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 set_activation_context(mesh, ("data",))
 
 cfg = smoke_config("qwen2-72b").replace(dtype="float32", num_kv_heads=2)
@@ -86,8 +85,7 @@ out["ef_nonzero"] = bool(jnp.any(err != 0))
 ck = CheckpointManager("/tmp/shard_ck", keep=1, async_save=False)
 ck.save(int(state.step), state)
 mc2 = MeshConfig((2, 4), ("data", "model"))
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((2, 4), ("data", "model"))
 st_sh2 = state_shardings(mesh2, mc2, state, specs)
 restored = ck.restore(jax.tree.map(lambda x: x, state), shardings=st_sh2)
 out["elastic_restore_ok"] = bool(jnp.allclose(
