@@ -19,6 +19,10 @@ used V100/A100 measurements (DESIGN.md §3).
             per-module path on a CPU-scaled BERT-base; writes BENCH_db.json
   spdy_eval device-resident SnapshotCache assignment stitching vs host
             per-module snapshot uploads; appended to BENCH_db.json
+  calib_shard  mesh-sharded collect_hessians vs single-device on a forced
+            2-device CPU mesh (subprocess); appended to BENCH_db.json
+  latency_cache  measured-table build cold vs warm (persistent cache hit);
+            appended to BENCH_db.json
 
 Run a subset with ``python benchmarks/run.py db_build spdy_eval``.
 """
@@ -61,6 +65,11 @@ TINY = GPT2_SMALL.replace(
     name="gpt2-tiny", num_layers=4, d_model=96, d_ff=384, num_heads=6,
     num_kv_heads=6, head_dim=16, vocab_size=384, dtype="float32")
 ENV = InferenceEnv(batch=16, seq=128, mode="prefill")
+
+# persistent latency cache for the measured-backend benches: a re-run of
+# the suite loads each (cfg, env) table instead of re-timing every level
+LAT_CACHE = {"cache_dir": os.path.join(os.path.dirname(__file__), "..",
+                                       "results", "latency_cache")}
 
 
 def row(name, us, derived):
@@ -206,7 +215,8 @@ def bench_table8_speedup_guarantee():
     calib = _STATE["calib"]
     env = InferenceEnv(batch=8, seq=64, mode="prefill")
     res = oneshot_prune(TINY, params, calib, env, targets=[1.5, 2.0],
-                        latency_backend="measure", search_steps=20, seed=3)
+                        latency_backend="measure", latency_kw=LAT_CACHE,
+                        search_steps=20, seed=3)
     tokens = calib[0]["tokens"]
     f_dense = jax.jit(lambda t: forward(TINY, params, t)["logits"])
     t_dense = _timeit(f_dense, tokens, reps=5)
@@ -231,7 +241,7 @@ def bench_fig5_scaling_law():
     res = oneshot_prune(TINY, params, calib,
                         InferenceEnv(batch=8, seq=64, mode="prefill"),
                         targets=targets, latency_backend="measure",
-                        search_steps=15, seed=4)
+                        latency_kw=LAT_CACHE, search_steps=15, seed=4)
     sp = np.array([res.variants[t].speedup for t in targets])
     ls = np.array([res.variants[t].calib_loss for t in targets])
     slope, intercept = np.polyfit(sp, ls, 1)
@@ -485,6 +495,86 @@ def bench_spdy_eval():
         f"speedup={speedup:.1f}x")
 
 
+_CALIB_SHARD_SCRIPT = r"""
+import json, time
+import jax
+from repro.configs import GPT2_SMALL
+from repro.core.hessian import collect_hessians
+from repro.data import calibration_batches
+from repro.distributed.sharding import make_mesh
+from repro.models import model_init
+
+CFG = GPT2_SMALL.replace(
+    name="gpt2-calib-bench", num_layers=4, d_model=128, d_ff=512,
+    num_heads=8, num_kv_heads=8, head_dim=16, vocab_size=512,
+    dtype="float32")
+params, _ = model_init(CFG, jax.random.key(0))
+calib = calibration_batches(CFG, 64, 128, batch=16)
+mesh = make_mesh((2,), ("data",))
+
+def timed(**kw):
+    collect_hessians(CFG, params, calib[:1], **kw)   # compile warm-up
+    t0 = time.perf_counter()
+    h = collect_hessians(CFG, params, calib, **kw)
+    return time.perf_counter() - t0, h
+
+t_single, h1 = timed()
+t_shard, h2 = timed(mesh=mesh)
+import jax.numpy as jnp
+rel = max(float(jnp.max(jnp.abs(h2[k]-h1[k]))
+                / (jnp.max(jnp.abs(h1[k])) + 1e-30)) for k in h1)
+print("RESULT" + json.dumps({
+    "devices": jax.device_count(), "samples": 64, "batch": 16, "seq": 128,
+    "single_device_s": t_single, "sharded_s": t_shard,
+    "speedup": t_single / max(t_shard, 1e-12), "hessian_rel_err": rel}))
+"""
+
+
+def bench_calib_shard():
+    """Data-parallel calibration speedup on a forced 2-device CPU mesh
+    (subprocess: the device count is fixed at jax import)."""
+    from repro.launch.subproc import run_forced_devices
+    try:
+        rec = run_forced_devices(_CALIB_SHARD_SCRIPT, 2)
+    except RuntimeError as e:
+        row("calib_shard", 0.0, "FAILED: " + str(e)[-200:])
+        return
+    _write_bench_db({"calib_shard": rec})
+    row("calib_shard", rec["sharded_s"] * 1e6,
+        f"single={rec['single_device_s']*1e3:.0f}ms "
+        f"sharded={rec['sharded_s']*1e3:.0f}ms "
+        f"speedup={rec['speedup']:.2f}x relerr={rec['hessian_rel_err']:.1e}")
+
+
+def bench_latency_cache():
+    """Measured-table build: cold (every level timed) vs warm (one cache
+    read) — the per-environment cost the persistent cache amortizes."""
+    import shutil
+    import tempfile
+    from repro.core import latency as lat
+    from repro.core.latency import build_table
+    d = tempfile.mkdtemp(prefix="ziplm_latbench_")
+    try:
+        kw = dict(grid_subsample=4, reps=3)
+        t0 = time.perf_counter()
+        build_table(TINY, ENV, backend="measure", cache_dir=d, **kw)
+        t_cold = time.perf_counter() - t0
+        before = dict(lat.TIMING_STATS)
+        t0 = time.perf_counter()
+        build_table(TINY, ENV, backend="measure", cache_dir=d, **kw)
+        t_warm = time.perf_counter() - t0
+        reps_on_hit = lat.TIMING_STATS["reps"] - before["reps"]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    rec = {"config": TINY.name, "cold_s": t_cold, "warm_s": t_warm,
+           "speedup": t_cold / max(t_warm, 1e-12),
+           "timing_reps_on_hit": reps_on_hit}
+    _write_bench_db({"latency_cache": rec})
+    row("latency_cache", t_warm * 1e6,
+        f"cold={t_cold*1e3:.0f}ms warm={t_warm*1e3:.1f}ms "
+        f"speedup={rec['speedup']:.0f}x reps_on_hit={reps_on_hit}")
+
+
 def bench_roofline():
     files = sorted(glob.glob(os.path.join(
         os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
@@ -517,12 +607,14 @@ BENCHES = {
     "kernels": bench_kernels,
     "db_build": bench_db_build,
     "spdy_eval": bench_spdy_eval,
+    "calib_shard": bench_calib_shard,
+    "latency_cache": bench_latency_cache,
     "roofline": bench_roofline,
 }
 
 # benches that run on synthetic weights/hessians; no tiny-GPT2 training
 _NO_TRAIN = {"table7", "table3", "kernels", "db_build", "spdy_eval",
-             "roofline"}
+             "calib_shard", "latency_cache", "roofline"}
 
 
 def main(argv=None) -> None:

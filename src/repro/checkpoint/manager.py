@@ -24,6 +24,31 @@ import jax
 import numpy as np
 
 
+def atomic_write_json(path: str, obj) -> None:
+    """Write JSON via tmp + ``os.replace`` — a killed writer can never
+    leave a half-written file (shared by manifests and latency caches).
+
+    The tmp name is pid-unique: latency-cache dirs are shared across
+    processes, and two concurrent writers of the same key must not race
+    on one tmp file (the loser's ``os.replace`` would FileNotFoundError).
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_json(path: str) -> Optional[Dict]:
+    """Read a JSON file; None (never raises) on a missing, unreadable or
+    corrupted file — callers treat that as a cache/manifest miss."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+        return None
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -98,13 +123,18 @@ class CheckpointManager:
     def _drain(self):
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            step, host, _ = item
             try:
+                if item is None:
+                    return
+                step, host, _ = item
                 self._write(step, host)
             except Exception as e:  # pragma: no cover
                 self._errors.append(e)
+            finally:
+                # task_done AFTER the write hits disk: wait()/join() must
+                # not return while a checkpoint is mid-flight (the old
+                # empty()-polling wait raced exactly there)
+                self._q.task_done()
 
     def _write(self, step: int, host: Dict[str, np.ndarray]):
         path = self._ckpt_path(step)
@@ -131,24 +161,19 @@ class CheckpointManager:
                 os.remove(os.path.join(self.dir, old["file"]))
             except OSError:
                 pass
-        mtmp = self._manifest_path() + ".tmp"
-        with open(mtmp, "w") as f:
-            json.dump(manifest, f, indent=1)
-        os.replace(mtmp, self._manifest_path())
+        atomic_write_json(self._manifest_path(), manifest)
 
     def _read_manifest(self) -> Dict:
-        try:
-            with open(self._manifest_path()) as f:
-                return json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return {}
+        return load_json(self._manifest_path()) or {}
 
     def wait(self):
-        """Block until queued saves are on disk."""
-        self._q.join() if False else None
-        while not self._q.empty():
-            time.sleep(0.01)
-        time.sleep(0.01)
+        """Block until every queued save is durably on disk.
+
+        Deterministic: ``join()`` returns only once the worker has called
+        ``task_done`` for each item, which happens after ``_write``'s
+        ``os.replace`` — so ``latest_step()`` after ``wait()`` always sees
+        the newest checkpoint."""
+        self._q.join()
 
     def latest_step(self) -> Optional[int]:
         m = self._read_manifest()

@@ -6,30 +6,56 @@ Hessians at once — the forward pass and every ``X^T X`` fuse into a single
 compiled call per batch, instead of a Python loop of one dispatch per
 module. The inner accumulation is the Pallas ``hessian_accum`` kernel's
 jnp twin; ``use_kernel=True`` routes through the kernel (interpret mode
-on CPU).
+on CPU); the kernel path seeds its VMEM accumulator from the running
+Hessian so ``H + X^T X`` is one tile-stream pass.
+
+Mesh-aware path: with a mesh (passed explicitly, or discovered from the
+installed ``distributed.activation`` context) whose data axes divide every
+calibration batch, the step runs under ``shard_map`` — each device runs
+the capture forward on its batch shard, accumulates its *partial*
+``X^T X`` locally, and the partials are ``psum``-ed over the data axes
+into replicated per-module Hessians. Still one jitted, buffer-donated
+call per batch; the single-device path is kept verbatim as the
+equivalence reference (tests/test_sharded_calibration.py asserts fp32
+agreement and identical pruning orders).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from ..distributed.activation import activation_context, \
+    get_activation_context
+from ..distributed.sharding import axis_size, data_axes_for
 from ..models.transformer import forward
 from .structures import PrunableModule, get_capture, registry
 
 
 def xtx(x: jnp.ndarray, valid: Optional[jnp.ndarray] = None,
-        use_kernel: bool = False) -> jnp.ndarray:
-    """X^T X for X: (N, d); optionally mask invalid rows."""
+        use_kernel: bool = False, acc: Optional[jnp.ndarray] = None
+        ) -> jnp.ndarray:
+    """X^T X for X: (N, d); optionally mask invalid rows and/or fold the
+    result into a running accumulator ``acc`` (returns acc + X^T X)."""
     x = x.astype(jnp.float32)
     if valid is not None:
         x = x * valid[:, None].astype(jnp.float32)
     if use_kernel:
         from ..kernels import ops as kops
-        return kops.hessian_accum(x)
-    return x.T @ x
+        return kops.hessian_accum(x, acc)
+    h = x.T @ x
+    return h if acc is None else acc + h
+
+
+def _donate():
+    # donate the accumulators so each batch updates them in place
+    # (donation is a no-op on CPU and would only emit warnings there)
+    return (0, 1) if jax.default_backend() != "cpu" else ()
 
 
 @functools.lru_cache(maxsize=16)
@@ -45,34 +71,103 @@ def _fused_step(cfg, use_kernel: bool):
         new_c: Dict[str, jnp.ndarray] = {}
         for mod in mods:
             x, valid = get_capture(caps, mod)
-            new_h[mod.name] = hessians[mod.name] \
-                + xtx(x, valid, use_kernel=use_kernel)
+            new_h[mod.name] = xtx(x, valid, use_kernel=use_kernel,
+                                  acc=hessians[mod.name])
             n = (jnp.float32(x.shape[0]) if valid is None
                  else jnp.sum(valid).astype(jnp.float32))
             new_c[mod.name] = counts[mod.name] + n
         return new_h, new_c
 
-    # donate the accumulators so each batch updates them in place
-    # (donation is a no-op on CPU and would only emit warnings there)
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(_step, donate_argnums=donate)
+    return jax.jit(_step, donate_argnums=_donate())
+
+
+@functools.lru_cache(maxsize=16)
+def _fused_step_sharded(cfg, use_kernel: bool, mesh, data_axes: Tuple[str]):
+    """Data-parallel twin of ``_fused_step``: per-device capture forward +
+    partial X^T X, psum-reduced over ``data_axes`` into replicated
+    accumulators."""
+    mods = registry(cfg)
+    batch_spec = P(data_axes)
+
+    def _step(hessians, counts, params, tokens, frontend):
+        caps = forward(cfg, params, tokens, frontend_embeds=frontend,
+                       capture=True)["captures"]
+        new_h: Dict[str, jnp.ndarray] = {}
+        new_c: Dict[str, jnp.ndarray] = {}
+        for mod in mods:
+            x, valid = get_capture(caps, mod)
+            part = xtx(x, valid, use_kernel=use_kernel)
+            n = (jnp.float32(x.shape[0]) if valid is None
+                 else jnp.sum(valid).astype(jnp.float32))
+            new_h[mod.name] = hessians[mod.name] \
+                + jax.lax.psum(part, data_axes)
+            new_c[mod.name] = counts[mod.name] + jax.lax.psum(n, data_axes)
+        return new_h, new_c
+
+    f = shard_map(_step, mesh=mesh,
+                  in_specs=(P(), P(), P(), batch_spec, batch_spec),
+                  out_specs=(P(), P()), check_rep=False)
+    return jax.jit(f, donate_argnums=_donate())
+
+
+def _resolve_mesh(mesh, data_axes):
+    """Explicit mesh wins; else the activation context's (mesh, batch
+    axes); data_axes defaults to the mesh's conventional data axes."""
+    if mesh is None:
+        mesh, ctx_axes = get_activation_context()
+        if data_axes is None:
+            data_axes = ctx_axes
+    if mesh is None:
+        return None, None
+    if data_axes is None:
+        data_axes = data_axes_for(mesh)
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    return mesh, tuple(data_axes)
 
 
 def collect_hessians(cfg, params, batches: List[Dict], *,
-                     use_kernel: bool = False) -> Dict[str, jnp.ndarray]:
-    """Returns {module_name: H_raw = sum X^T X / n_samples} over batches."""
+                     use_kernel: bool = False, mesh=None,
+                     data_axes=None) -> Dict[str, jnp.ndarray]:
+    """Returns {module_name: H_raw = sum X^T X / n_samples} over batches.
+
+    With a mesh (explicit or from the activation context) whose data-axis
+    size divides every batch, calibration runs data-parallel; otherwise it
+    falls back to the single-device reference path.
+    """
     if not batches:
         raise ValueError("collect_hessians needs at least one calibration "
                          "batch (got an empty list)")
     mods = registry(cfg)
-    step = _fused_step(cfg, use_kernel)
+    mesh, data_axes = _resolve_mesh(mesh, data_axes)
+    ndev = axis_size(mesh, data_axes) if mesh is not None else 1
+    sharded = ndev > 1 and all(
+        b["tokens"].shape[0] % ndev == 0 for b in batches)
 
     hessians = {m.name: jnp.zeros((m.d_in, m.d_in), jnp.float32)
                 for m in mods}
     counts = {m.name: jnp.zeros((), jnp.float32) for m in mods}
-    for batch in batches:
-        hessians, counts = step(hessians, counts, params, batch["tokens"],
-                                batch.get("frontend"))
+    if sharded:
+        step = _fused_step_sharded(cfg, use_kernel, mesh, data_axes)
+        rep = NamedSharding(mesh, P())
+        dp = NamedSharding(mesh, P(data_axes))
+        params = jax.device_put(params, rep)
+        hessians = jax.device_put(hessians, rep)
+        counts = jax.device_put(counts, rep)
+        # the constraint hooks inside `forward` must stay no-ops while the
+        # shard_map body traces (with_sharding_constraint is a global-view
+        # op); restore the caller's context afterwards
+        with activation_context(None, None):
+            for batch in batches:
+                tokens = jax.device_put(batch["tokens"], dp)
+                fe = batch.get("frontend")
+                fe = jax.device_put(fe, dp) if fe is not None else None
+                hessians, counts = step(hessians, counts, params, tokens, fe)
+    else:
+        step = _fused_step(cfg, use_kernel)
+        for batch in batches:
+            hessians, counts = step(hessians, counts, params,
+                                    batch["tokens"], batch.get("frontend"))
 
     # normalize by sample count (keeps damping scale-invariant)
     counts = jax.device_get(counts)

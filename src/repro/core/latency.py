@@ -14,6 +14,7 @@ runtime, which is what gives ZipLM its speedup *guarantee*.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -105,7 +106,14 @@ def build_costmodel_table(cfg, env: cm.InferenceEnv) -> LatencyTable:
 # measured backend (paper's procedure, on the current device)
 # ----------------------------------------------------------------------
 
+# observable measurement-effort counters: a latency-cache hit must perform
+# zero timing work (tests/test_latency_cache.py asserts on the deltas)
+TIMING_STATS = {"calls": 0, "reps": 0}
+
+
 def _time_fn(fn, *args, reps: int = 5) -> float:
+    TIMING_STATS["calls"] += 1
+    TIMING_STATS["reps"] += reps
     jax.block_until_ready(fn(*args))  # compile + warm
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -189,9 +197,27 @@ def build_measured_table(cfg, env: cm.InferenceEnv, *,
 
 
 def build_table(cfg, env: cm.InferenceEnv, backend: str = "costmodel",
+                cache_dir: Optional[str] = None, refresh: bool = False,
                 **kw) -> LatencyTable:
+    """Build (or fetch) the latency table for a (cfg, env).
+
+    The ``measure`` backend persists results through
+    ``core.latency_cache`` so each environment pays its timing cost once:
+    caching activates when ``cache_dir`` is given or
+    ``$ZIPLM_LATENCY_CACHE`` is set (opt-in keeps bare runs hermetic);
+    ``refresh=True`` forces a re-measure and overwrites the cached entry.
+    The analytic ``costmodel`` backend is cheap and never cached.
+    """
     if backend == "costmodel":
         return build_costmodel_table(cfg, env)
     if backend == "measure":
-        return build_measured_table(cfg, env, **kw)
+        if cache_dir is None and not os.environ.get("ZIPLM_LATENCY_CACHE"):
+            return build_measured_table(cfg, env, **kw)
+        from .latency_cache import LatencyCache
+        lc = LatencyCache(cache_dir)
+        tab = None if refresh else lc.get(cfg, env, **kw)
+        if tab is None:
+            tab = build_measured_table(cfg, env, **kw)
+            lc.put(cfg, env, tab, **kw)
+        return tab
     raise ValueError(f"unknown latency backend {backend!r}")

@@ -1,0 +1,181 @@
+"""Persistent cache for measured latency tables.
+
+``build_measured_table`` walks every module kind over its (subsampled)
+level grid and wall-clock-times a jitted module at each point — tens of
+compile+measure cycles per (cfg, env). ZipLM amortizes that cost across a
+whole family of compressed models; this cache amortizes it across *runs*:
+repeated ``oneshot_prune``/``gradual_prune`` invocations, the benchmark
+suite, and every member of a gradual family re-use one measurement of the
+environment.
+
+Cache key
+---------
+A table is valid only for the exact measurement setup that produced it.
+The key is the SHA-256 of the canonical JSON of:
+
+* ``cfg`` — every field of the ``ModelConfig`` dataclass (any
+  architecture change re-measures; fingerprinting a subset would silently
+  alias configs that time differently);
+* ``env`` — every field of the ``InferenceEnv`` including the nested
+  ``HardwareSpec`` (batch/seq/mode/tp and the device the analytic model
+  would target);
+* the measuring device: ``jax.default_backend()`` and the concrete
+  ``device_kind`` of device 0 (a table measured on CPU must never serve a
+  TPU run and vice versa);
+* ``jax.__version__`` — dispatch/compile behaviour shifts between
+  releases;
+* the measurement parameters (``grid_subsample``, ``reps``, and any other
+  kwargs forwarded to ``build_measured_table``).
+
+Invalidation rules
+------------------
+A lookup is a *miss* (returns None, caller re-measures) when:
+
+* no file exists for the key;
+* ``format_version`` differs from ``FORMAT_VERSION`` (schema evolution);
+* the stored key dict differs from the recomputed one (hash collision or
+  a stale file copied between machines);
+* the payload hash does not match (bit-rot / truncation / hand-edits) or
+  the JSON does not parse at all.
+
+Corruption therefore can never crash a run or serve wrong numbers — the
+worst case is one redundant re-measure, after which ``put`` atomically
+overwrites the bad file (tmp + ``os.replace`` via
+``checkpoint.manager.atomic_write_json``).
+
+The cache directory resolves to, in order: the ``cache_dir`` argument,
+``$ZIPLM_LATENCY_CACHE``, or ``~/.cache/ziplm/latency``. Callers that
+need hermetic behaviour (tests) pass an explicit directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import atomic_write_json, load_json
+from ..runtime import costmodel as cm
+from .latency import LatencyTable
+
+FORMAT_VERSION = 1
+
+
+def _canon(obj) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def cfg_fingerprint(cfg) -> Dict:
+    """ModelConfig as a plain JSON-able dict (full field set)."""
+    return dataclasses.asdict(cfg)
+
+
+def env_fingerprint(env: cm.InferenceEnv) -> Dict:
+    """InferenceEnv (incl. nested HardwareSpec) as a JSON-able dict."""
+    return dataclasses.asdict(env)
+
+
+def device_fingerprint() -> Dict:
+    dev = jax.devices()[0]
+    return {"backend": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "jax_version": jax.__version__}
+
+
+def _resolved_measure_kw(measure_kw: Dict) -> Dict:
+    """Measure kwargs with ``build_measured_table``'s current defaults
+    folded in: an implicit-default call and an explicit call with the same
+    values key identically, and a future default change invalidates
+    tables that were measured under the old default."""
+    import inspect
+
+    from .latency import build_measured_table
+    sig = inspect.signature(build_measured_table)
+    out = {name: p.default for name, p in sig.parameters.items()
+           if p.default is not inspect.Parameter.empty}
+    out.update(measure_kw)
+    return out
+
+
+def cache_key(cfg, env: cm.InferenceEnv, measure_kw: Dict) -> Dict:
+    measure_kw = _resolved_measure_kw(measure_kw)
+    return {"format_version": FORMAT_VERSION,
+            "cfg": cfg_fingerprint(cfg),
+            "env": env_fingerprint(env),
+            "device": device_fingerprint(),
+            "measure": {k: measure_kw[k] for k in sorted(measure_kw)}}
+
+
+def _key_hash(key: Dict) -> str:
+    return hashlib.sha256(_canon(key).encode()).hexdigest()
+
+
+def _table_payload(tab: LatencyTable) -> Dict:
+    return {"base": float(tab.base),
+            "grids": {k: np.asarray(v).tolist()
+                      for k, v in tab.grids.items()},
+            "times": {k: np.asarray(v).tolist()
+                      for k, v in tab.times.items()}}
+
+
+def default_cache_dir() -> str:
+    return os.environ.get("ZIPLM_LATENCY_CACHE") \
+        or os.path.expanduser("~/.cache/ziplm/latency")
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+
+
+class LatencyCache:
+    """Versioned on-disk store of measured ``LatencyTable``s."""
+
+    def __init__(self, cache_dir: Optional[str] = None):
+        self.dir = cache_dir or default_cache_dir()
+        self.stats = CacheStats()
+
+    def _path(self, key: Dict) -> str:
+        return os.path.join(self.dir, f"lat_{_key_hash(key)}.json")
+
+    # ------------------------------------------------------------------
+    def get(self, cfg, env: cm.InferenceEnv,
+            **measure_kw) -> Optional[LatencyTable]:
+        """The cached table for exactly this setup, or None (miss)."""
+        key = cache_key(cfg, env, measure_kw)
+        rec = load_json(self._path(key))
+        if (rec is None
+                or rec.get("format_version") != FORMAT_VERSION
+                or rec.get("key") != key
+                or rec.get("payload_sha256") != hashlib.sha256(
+                    _canon(rec.get("payload", {})).encode()).hexdigest()):
+            self.stats.misses += 1
+            return None
+        payload = rec["payload"]
+        tab = LatencyTable(env=env, base=float(payload["base"]))
+        for kind in payload["grids"]:
+            tab.grids[kind] = np.asarray(payload["grids"][kind])
+            tab.times[kind] = np.asarray(payload["times"][kind])
+        self.stats.hits += 1
+        return tab
+
+    def put(self, cfg, env: cm.InferenceEnv, tab: LatencyTable,
+            **measure_kw) -> str:
+        """Persist a measured table; returns the file path."""
+        key = cache_key(cfg, env, measure_kw)
+        payload = _table_payload(tab)
+        rec = {"format_version": FORMAT_VERSION, "key": key,
+               "payload": payload,
+               "payload_sha256": hashlib.sha256(
+                   _canon(payload).encode()).hexdigest()}
+        path = self._path(key)
+        atomic_write_json(path, rec)
+        self.stats.puts += 1
+        return path

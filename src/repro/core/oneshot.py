@@ -55,13 +55,24 @@ def calib_loss_fn(cfg, batches):
 def oneshot_prune(cfg, params, calib_batches: List[dict],
                   env: InferenceEnv, targets: Sequence[float], *,
                   latency_backend: str = "costmodel",
+                  latency_kw: Optional[dict] = None,
                   search_steps: int = 200, eval_with_loss: bool = True,
                   eval_batches: Optional[List[dict]] = None,
                   damp: float = 1e-4, use_kernel: bool = False,
+                  mesh=None, data_axes=None,
                   seed: int = 0, verbose: bool = False) -> OneShotResult:
+    """One-shot family pruning.
+
+    ``mesh``/``data_axes`` shard calibration data-parallel (also picked up
+    from the installed activation context); ``latency_kw`` is forwarded to
+    ``build_table`` — e.g. ``{"cache_dir": ...}`` so a measured table is
+    loaded from / persisted to the latency cache instead of re-timed.
+    """
     hessians = collect_hessians(cfg, params, calib_batches,
-                                use_kernel=use_kernel)
-    table = build_table(cfg, env, backend=latency_backend)
+                                use_kernel=use_kernel, mesh=mesh,
+                                data_axes=data_axes)
+    table = build_table(cfg, env, backend=latency_backend,
+                        **(latency_kw or {}))
     db = build_database(cfg, params, hessians, damp=damp, verbose=verbose)
     # device-resident snapshots only pay off for per-candidate loss eval;
     # without it the final per-target stitch is cheap on the host path

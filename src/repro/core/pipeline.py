@@ -67,20 +67,28 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                   data: Iterator[Dict], calib_batches: List[Dict], *,
                   tcfg: Optional[TrainConfig] = None,
                   finetune_steps: int = 50, search_steps: int = 50,
-                  latency_backend: str = "costmodel", ckpt_dir: str = None,
+                  latency_backend: str = "costmodel",
+                  latency_kw: Optional[Dict] = None,
+                  mesh=None, data_axes=None, ckpt_dir: str = None,
                   verbose: bool = False) -> List[GradualVariant]:
+    """Gradual family pruning. ``latency_kw`` (e.g. ``{"cache_dir": ...}``)
+    routes the measured-latency backend through the persistent cache —
+    the table is measured once for the whole family; ``mesh``/``data_axes``
+    shard the per-target re-calibration over the mesh's data axes."""
     tcfg = tcfg or TrainConfig(learning_rate=8e-5, warmup_steps=5,
                                total_steps=finetune_steps,
                                distill_logit=1.0, distill_token=0.5)
     teacher = jax.tree.map(lambda a: a, params)  # dense teacher
-    table = build_table(cfg, env, backend=latency_backend)
+    table = build_table(cfg, env, backend=latency_backend,
+                        **(latency_kw or {}))
     loss_eval = calib_loss_fn(cfg, calib_batches[:1])
 
     current = params
     out: List[GradualVariant] = []
     for i, target in enumerate(sorted(targets)):
         # re-calibrate on the *current* model (Hessians drift as we prune)
-        hessians = collect_hessians(cfg, current, calib_batches)
+        hessians = collect_hessians(cfg, current, calib_batches,
+                                    mesh=mesh, data_axes=data_axes)
         db = build_database(cfg, current, hessians)
         cache = SnapshotCache(cfg, db)
         res = search(db, table, target, steps=search_steps,

@@ -30,16 +30,31 @@ def clear_activation_context() -> None:
     _ctx.batch_axes = None
 
 
+def get_activation_context() -> Tuple[Optional[Mesh], Optional[Tuple]]:
+    """The installed (mesh, batch_axes), or (None, None) outside a context.
+
+    Calibration (``core.hessian.collect_hessians``) uses this to discover
+    the mesh a launcher installed and shard calibration batches over its
+    data axes without new plumbing.
+    """
+    return getattr(_ctx, "mesh", None), getattr(_ctx, "batch_axes", None)
+
+
 class activation_context:
+    """Install (mesh, batch_axes); on exit restore whatever was installed
+    before (contexts nest — e.g. sharded calibration clears the constraint
+    hooks around its shard_map trace without losing the outer context)."""
+
     def __init__(self, mesh, batch_axes):
         self.mesh, self.batch_axes = mesh, batch_axes
 
     def __enter__(self):
+        self._prev = get_activation_context()
         set_activation_context(self.mesh, self.batch_axes)
         return self
 
     def __exit__(self, *a):
-        clear_activation_context()
+        set_activation_context(*self._prev)
         return False
 
 

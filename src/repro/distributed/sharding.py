@@ -51,6 +51,18 @@ def _axis_size(mesh: Mesh, axes) -> int:
     return n
 
 
+def axis_size(mesh: Mesh, axes) -> int:
+    """Total number of shards over `axes` (None -> 1)."""
+    return _axis_size(mesh, axes)
+
+
+def data_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    """Default data-parallel axes of a mesh: the conventional ("pod",
+    "data") names when present, else every axis (pure-DP meshes)."""
+    named = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return named or tuple(mesh.axis_names)
+
+
 def logical_to_pspec(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh,
                      mc: MeshConfig) -> P:
     """Map one leaf's logical axis names to a PartitionSpec."""

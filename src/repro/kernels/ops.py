@@ -39,10 +39,11 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
 
 @functools.partial(jax.jit, static_argnames=("block_d", "block_n",
                                              "interpret"))
-def hessian_accum(x, *, block_d=256, block_n=512, interpret=None):
-    """(N, D) -> (D, D) fp32 X^T X."""
+def hessian_accum(x, acc=None, *, block_d=256, block_n=512, interpret=None):
+    """(N, D) -> (D, D) fp32 X^T X; with ``acc`` (D, D) returns
+    ``acc + X^T X`` in one tile-stream pass (calibration update)."""
     interpret = _default_interpret() if interpret is None else interpret
-    return hessian_accum_kernel(x, block_d=block_d, block_n=block_n,
+    return hessian_accum_kernel(x, acc, block_d=block_d, block_n=block_n,
                                 interpret=interpret)
 
 

@@ -53,6 +53,10 @@ def test_corruption_detected(tmp_path):
 
 
 def test_trainer_resume_after_preemption(tiny_cfg, tmp_path):
+    """Deterministic preemption-resume: the kill point is a fixed step
+    count (stop_after), and fit()'s final wait() joins the async save
+    queue, so the step-10 checkpoint is durably on disk by the time fit
+    returns — every assertion below is exact, not timing-dependent."""
     from repro.models import model_init
     params, _ = model_init(tiny_cfg, jax.random.key(0))
     tcfg = TrainConfig(learning_rate=1e-3, total_steps=40, warmup_steps=2)
@@ -61,9 +65,11 @@ def test_trainer_resume_after_preemption(tiny_cfg, tmp_path):
     data = synthetic_stream(tiny_cfg, 8, 32, seed=3)
     state = t1.init_or_restore(params)
     state = t1.fit(state, data, steps=40, stop_after=12)  # simulated kill
-    assert int(state.step) >= 12
+    assert int(state.step) == 12
     killed_at = t1.ckpt.latest_step()
-    assert killed_at is not None and killed_at >= 10
+    # ckpt_every=5 and the kill after step 12 => saves at 5 and 10, and
+    # wait() guarantees both are visible: exactly 10, never 5 or None
+    assert killed_at == 10
     t1.ckpt.close()
 
     # fresh trainer resumes from the checkpoint, not from scratch
@@ -71,7 +77,7 @@ def test_trainer_resume_after_preemption(tiny_cfg, tmp_path):
     data2 = synthetic_stream(tiny_cfg, 8, 32, seed=3,
                              start_step=killed_at)
     state2 = t2.init_or_restore(params)
-    assert int(state2.step) == killed_at
+    assert int(state2.step) == 10
     state2 = t2.fit(state2, data2, steps=25)
     assert int(state2.step) == 25
     t2.ckpt.close()

@@ -61,6 +61,19 @@ def test_hessian_accum_vs_ref(shape, dtype):
                                atol=tol * shape[0] ** 0.5, rtol=tol)
 
 
+@pytest.mark.parametrize("shape", [(1, 1), (5, 7), (129, 33), (300, 70)])
+def test_hessian_accum_with_accumulator(shape):
+    """The acc-seeded tile stream == acc + X^T X on odd (pad-path)
+    shapes — the calibration streaming update's kernel route."""
+    n, d = shape
+    x = _mk(shape, jnp.float32, 14)
+    acc = _mk((d, d), jnp.float32, 15)
+    out = ops.hessian_accum(x, acc, block_d=32, block_n=64, interpret=True)
+    expect = acc + ref.hessian_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4 * n ** 0.5, rtol=1e-4)
+
+
 SSD_CASES = [
     # b, s, h, p, n, chunk, head_block
     (2, 64, 4, 32, 16, 32, 2),

@@ -1,0 +1,161 @@
+"""Latency-cache correctness: hit/miss/invalidation semantics, corruption
+recovery, and hit-equals-fresh-measure down to identical SPDY assignments."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import GPT2_SMALL
+from repro.core import latency
+from repro.core.latency import build_measured_table, build_table
+from repro.core.latency_cache import (FORMAT_VERSION, LatencyCache,
+                                      cache_key, default_cache_dir)
+from repro.runtime.costmodel import InferenceEnv
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+ENV = InferenceEnv(batch=4, seq=32, mode="prefill")
+KW = dict(grid_subsample=8, reps=1)
+
+
+def _reps():
+    return latency.TIMING_STATS["reps"]
+
+
+def _tables_equal(a, b):
+    assert sorted(a.grids) == sorted(b.grids)
+    for k in a.grids:
+        np.testing.assert_array_equal(a.grids[k], b.grids[k])
+        np.testing.assert_array_equal(a.times[k], b.times[k])
+    assert a.base == b.base
+
+
+def test_roundtrip_hit_and_miss(tmp_path):
+    lc = LatencyCache(str(tmp_path))
+    assert lc.get(TINY, ENV, **KW) is None          # cold miss
+    tab = build_measured_table(TINY, ENV, **KW)
+    lc.put(TINY, ENV, tab, **KW)
+    got = lc.get(TINY, ENV, **KW)
+    assert got is not None
+    _tables_equal(tab, got)
+    assert lc.stats.hits == 1 and lc.stats.misses == 1
+
+
+def test_build_table_hit_performs_zero_timing_reps(tmp_path):
+    d = str(tmp_path)
+    t1 = build_table(TINY, ENV, backend="measure", cache_dir=d, **KW)
+    before = _reps()
+    t2 = build_table(TINY, ENV, backend="measure", cache_dir=d, **KW)
+    assert _reps() == before                         # zero timing work
+    _tables_equal(t1, t2)
+    # refresh forces a re-measure even on a warm cache
+    build_table(TINY, ENV, backend="measure", cache_dir=d, refresh=True,
+                **KW)
+    assert _reps() > before
+
+
+def test_invalidation_on_cfg_env_and_measure_change(tmp_path):
+    d = str(tmp_path)
+    build_table(TINY, ENV, backend="measure", cache_dir=d, **KW)
+    for other_cfg, other_env, kw in [
+        (TINY.replace(d_ff=192), ENV, KW),                   # cfg change
+        (TINY, ENV.replace(batch=8), KW),                    # env change
+        (TINY, ENV, dict(grid_subsample=4, reps=1)),         # measure kw
+    ]:
+        before = _reps()
+        build_table(other_cfg, other_env, backend="measure", cache_dir=d,
+                    **kw)
+        assert _reps() > before, (other_cfg.name, other_env, kw)
+
+
+def test_corrupted_file_is_a_miss_not_a_crash(tmp_path):
+    d = str(tmp_path)
+    build_table(TINY, ENV, backend="measure", cache_dir=d, **KW)
+    (path,) = glob.glob(os.path.join(d, "lat_*.json"))
+
+    # truncated / non-JSON garbage
+    with open(path, "w") as f:
+        f.write("{definitely not json")
+    before = _reps()
+    build_table(TINY, ENV, backend="measure", cache_dir=d, **KW)
+    assert _reps() > before                          # re-measured
+
+    # valid JSON whose payload was tampered with (hash mismatch)
+    with open(path) as f:
+        rec = json.load(f)
+    rec["payload"]["base"] = 123.0
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    lc = LatencyCache(d)
+    assert lc.get(TINY, ENV, **KW) is None
+
+    # stale format version
+    with open(path) as f:
+        rec = json.load(f)
+    rec["format_version"] = FORMAT_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    assert lc.get(TINY, ENV, **KW) is None
+
+
+def test_key_covers_device_and_jax_version():
+    key = cache_key(TINY, ENV, KW)
+    assert "jax_version" in key["device"]
+    assert "device_kind" in key["device"]
+    assert key["cfg"]["d_ff"] == TINY.d_ff
+    assert key["measure"] == {"grid_subsample": 8, "reps": 1}
+
+
+def test_key_resolves_measure_defaults():
+    """An implicit-default call and an explicit call passing the same
+    values must alias to one cache entry (defaults are folded into the
+    key, so a future default change also invalidates old tables)."""
+    import inspect
+
+    from repro.core.latency import build_measured_table
+    defaults = {n: p.default for n, p
+                in inspect.signature(build_measured_table).parameters.items()
+                if p.default is not inspect.Parameter.empty}
+    assert cache_key(TINY, ENV, {}) == cache_key(TINY, ENV, defaults)
+    assert cache_key(TINY, ENV, {}) != cache_key(TINY, ENV, KW)
+
+
+def test_default_dir_resolution(monkeypatch, tmp_path):
+    monkeypatch.setenv("ZIPLM_LATENCY_CACHE", str(tmp_path / "lc"))
+    assert default_cache_dir() == str(tmp_path / "lc")
+    # build_table with no cache_dir opts in through the env var
+    build_table(TINY, ENV, backend="measure", **KW)
+    assert glob.glob(str(tmp_path / "lc" / "lat_*.json"))
+    monkeypatch.delenv("ZIPLM_LATENCY_CACHE")
+    assert default_cache_dir().endswith("ziplm/latency")
+
+
+def test_cache_hit_gives_identical_spdy_assignments(trained_tiny, tiny_cfg,
+                                                    tiny_calib, tmp_path):
+    """A cached table must drive the search to the exact assignment a
+    fresh measurement produced (times are equal, so the DP and the seeded
+    mutation loop follow the same trajectory)."""
+    from repro.core.database import build_database
+    from repro.core.hessian import collect_hessians
+    from repro.core.spdy import search
+
+    params, _ = trained_tiny
+    env = InferenceEnv(batch=8, seq=64, mode="prefill")
+    d = str(tmp_path)
+    tab_fresh = build_table(tiny_cfg, env, backend="measure", cache_dir=d,
+                            **KW)
+    before = _reps()
+    tab_hit = build_table(tiny_cfg, env, backend="measure", cache_dir=d,
+                          **KW)
+    assert _reps() == before
+    _tables_equal(tab_fresh, tab_hit)
+
+    hess = collect_hessians(tiny_cfg, params, tiny_calib)
+    db = build_database(tiny_cfg, params, hess)
+    res_fresh = search(db, tab_fresh, 2.0, steps=30, seed=0)
+    res_hit = search(db, tab_hit, 2.0, steps=30, seed=0)
+    assert res_fresh.assignment == res_hit.assignment
+    assert res_fresh.runtime == res_hit.runtime

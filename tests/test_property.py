@@ -101,3 +101,67 @@ def test_hessian_psd(seed, n, d):
     H = np.asarray(build_hessian(jnp.asarray(X.T @ X / n, jnp.float32)))
     evals = np.linalg.eigvalsh(H)
     assert evals.min() > 0
+
+
+# ----------------------------------------------------------------------
+# Pallas kernels vs their jnp oracles across adversarial (odd) shapes.
+# All randomness flows through a drawn integer seed -> np rng, so every
+# failing example is replayable from hypothesis' shrunk seed alone.
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    d=st.integers(1, 70),        # non-multiple-of-block widths included
+    seed=st.integers(0, 10_000),
+    with_acc=st.booleans(),
+)
+def test_hessian_accum_kernel_matches_xtx(n, d, seed, with_acc):
+    """hessian_accum == X^T X (+ acc) for any (N, D), including shapes
+    that exercise both pad branches of the tile stream."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    acc = (jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+           if with_acc else None)
+    got = ops.hessian_accum(x, acc, block_d=32, block_n=64, interpret=True)
+    expect = x.T @ x + (acc if acc is not None else 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=1e-4 * max(n, 1) ** 0.5, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_groups=st.integers(1, 9),
+    gs=st.sampled_from([1, 2, 3, 5]),    # rank-1 fast path AND rank-gs
+    d_out=st.integers(1, 40),
+    seed=st.integers(0, 10_000),
+)
+def test_obs_downdate_kernel_matches_ref(n_groups, gs, d_out, seed):
+    """ops.obs_downdate == kernels.ref.obs_downdate_ref on a real OBS
+    removal step for odd d_in (non-multiple-of-block) and group_size 1
+    vs >1."""
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(seed)
+    d_in = n_groups * gs
+    X = rng.standard_normal((2 * d_in + 8, d_in))
+    H = build_hessian(jnp.asarray(X.T @ X / len(X), jnp.float32), 1e-4)
+    Hinv = jnp.linalg.inv(H).astype(jnp.float32)
+    W = jnp.asarray(rng.standard_normal((d_in, d_out)), jnp.float32)
+    s = int(rng.integers(n_groups))
+    rows = jnp.arange(s * gs, (s + 1) * gs)
+    HcolS = Hinv[:, rows]
+    Ks = jnp.linalg.inv(Hinv[jnp.ix_(rows, rows)])
+    KsWS = Ks @ W[rows, :]
+    KsHcolT = Ks @ HcolS.T
+    keep = jnp.ones((d_in,), jnp.float32).at[rows].set(0.0)
+    W_k, H_k = ops.obs_downdate(W, Hinv, HcolS, KsWS, KsHcolT, keep,
+                                block_d=32, interpret=True)
+    W_r, H_r = ref.obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep)
+    np.testing.assert_allclose(np.asarray(W_k), np.asarray(W_r),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(H_k), np.asarray(H_r),
+                               atol=1e-5, rtol=1e-5)
+    # removed rows/cols are exactly zero in both
+    assert np.all(np.asarray(W_k)[s * gs:(s + 1) * gs] == 0.0)
+    assert np.all(np.asarray(H_k)[s * gs:(s + 1) * gs] == 0.0)

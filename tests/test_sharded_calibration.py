@@ -1,0 +1,91 @@
+"""Sharded-vs-single-device calibration equivalence on a real (forced
+2-device CPU) mesh, run in a subprocess so the main test process keeps its
+single device (same pattern as tests/test_sharding.py)."""
+import pytest
+
+from repro.launch.subproc import run_forced_devices
+
+SCRIPT = r"""
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import GPT2_SMALL
+from repro.core.database import build_database
+from repro.core.hessian import collect_hessians
+from repro.data import calibration_batches
+from repro.distributed.activation import activation_context
+from repro.distributed.sharding import make_mesh
+from repro.models import model_init
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+
+out = {"devices": jax.device_count()}
+params, _ = model_init(TINY, jax.random.key(0))
+calib = calibration_batches(TINY, 16, 64, batch=8)
+
+h_ref = collect_hessians(TINY, params, calib)
+mesh = make_mesh((2,), ("data",))
+h_sh = collect_hessians(TINY, params, calib, mesh=mesh)
+
+# bitwise-tolerant Hessian agreement: only fp32 reassociation between the
+# per-device partial sums and the single-device sum
+rel = max(
+    float(jnp.max(jnp.abs(h_sh[k] - h_ref[k]))
+          / (jnp.max(jnp.abs(h_ref[k])) + 1e-30)) for k in h_ref)
+out["hessian_rel_err"] = rel
+out["hessian_ok"] = rel < 1e-5
+out["keys_match"] = sorted(h_sh) == sorted(h_ref)
+
+# the sharded Hessians must induce the same Algorithm-1 pruning orders
+db_ref = build_database(TINY, params, h_ref)
+db_sh = build_database(TINY, params, h_sh)
+out["orders_equal"] = all(
+    bool(np.array_equal(db_ref[k].order, db_sh[k].order)) for k in db_ref)
+out["errors_close"] = all(
+    bool(np.allclose(db_ref[k].errors, db_sh[k].errors,
+                     rtol=1e-4, atol=1e-6)) for k in db_ref)
+
+# ambient discovery: the activation context supplies the mesh, and the
+# caller's context is restored after collection
+with activation_context(mesh, ("data",)):
+    h_ctx = collect_hessians(TINY, params, calib)
+    from repro.distributed.activation import get_activation_context
+    out["context_restored"] = get_activation_context()[0] is mesh
+out["context_rel_err"] = max(
+    float(jnp.max(jnp.abs(h_ctx[k] - h_sh[k]))) for k in h_sh)
+
+# Pallas hessian_accum tile stream under shard_map (interpret mode on CPU)
+h_kern = collect_hessians(TINY, params, calib, mesh=mesh, use_kernel=True)
+out["kernel_rel_err"] = max(
+    float(jnp.max(jnp.abs(h_kern[k] - h_ref[k]))
+          / (jnp.max(jnp.abs(h_ref[k])) + 1e-30)) for k in h_ref)
+out["kernel_ok"] = out["kernel_rel_err"] < 1e-5
+
+# non-divisible batches fall back to the single-device path, same result
+ragged = calibration_batches(TINY, 11, 64, batch=4)  # last batch of 3
+h_rag_sh = collect_hessians(TINY, params, ragged, mesh=mesh)
+h_rag_ref = collect_hessians(TINY, params, ragged)
+out["ragged_exact"] = all(
+    bool(jnp.array_equal(h_rag_sh[k], h_rag_ref[k])) for k in h_rag_ref)
+
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.mark.tier2
+@pytest.mark.slow
+def test_sharded_calibration_2dev():
+    out = run_forced_devices(SCRIPT, 2)
+    assert out["devices"] == 2
+    assert out["keys_match"]
+    assert out["hessian_ok"], out["hessian_rel_err"]
+    assert out["orders_equal"]
+    assert out["errors_close"]
+    assert out["context_rel_err"] == 0.0
+    assert out["context_restored"]
+    assert out["kernel_ok"], out["kernel_rel_err"]
+    assert out["ragged_exact"]

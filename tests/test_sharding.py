@@ -1,15 +1,10 @@
 """Distribution correctness on a real (forced 8-device CPU) mesh, run in a
 subprocess so the main test process keeps its single device."""
-import json
-import os
-import subprocess
-import sys
-
 import pytest
 
+from repro.launch.subproc import run_forced_devices
+
 SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 import jax.numpy as jnp
@@ -104,16 +99,10 @@ print("RESULT" + json.dumps(out))
 """
 
 
+@pytest.mark.tier2
 @pytest.mark.slow
 def test_distributed_8dev():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=900)
-    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
-    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][-1]
-    out = json.loads(line[len("RESULT"):])
+    out = run_forced_devices(SCRIPT, 8)
     assert out["loss_decreased"], out["losses"]
     assert out["loss_match"]
     assert out["compress_ok"], out["compress_rel_err"]
