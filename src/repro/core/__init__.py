@@ -3,7 +3,8 @@ one-shot & gradual pipelines (the paper's primary contribution)."""
 from .database import ModuleDB, apply_assignment, build_database
 from .hessian import collect_hessians
 from .latency import LatencyTable, build_table
-from .obs import build_hessian, module_drop_error, prune_structured
+from .obs import (build_hessian, module_drop_error, prune_structured,
+                  prune_structured_compact)
 from .oneshot import OneShotResult, PrunedVariant, oneshot_prune
 from .spdy import SearchResult, dp_select, search
 from .structures import PrunableModule, get_matrix, level_grid, registry

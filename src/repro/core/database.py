@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .obs import (build_hessian, module_drop_error, module_drop_errors,
-                  prune_structured, prune_structured_batched)
+                  prune_structured, prune_structured_batched,
+                  prune_structured_batched_compact, prune_structured_compact)
 from .structures import (PrunableModule, get_matrix, level_grid, registry,
                          set_matrix)
 
@@ -67,14 +68,15 @@ def _finish_module_db(mod: PrunableModule, levels: np.ndarray,
 
 
 def build_module_db(cfg, params, mod: PrunableModule, h_raw,
-                    damp: float = 1e-4) -> ModuleDB:
+                    damp: float = 1e-4, compact: bool = False) -> ModuleDB:
     W = get_matrix(cfg, params, mod).astype(jnp.float32)
     H = build_hessian(h_raw, damp)
     Hinv = jnp.linalg.inv(H)
     levels = level_grid(mod)
     n_remove = max(levels)
-    res = prune_structured(W, Hinv, group_size=mod.group_size,
-                           n_remove=n_remove, levels=tuple(levels))
+    prune = prune_structured_compact if compact else prune_structured
+    res = prune(W, Hinv, group_size=mod.group_size,
+                n_remove=n_remove, levels=tuple(levels))
     base = float(module_drop_error(W, h_raw))
     return _finish_module_db(mod, np.asarray(levels),
                              np.asarray(res.snapshots, np.float16),
@@ -98,17 +100,27 @@ def group_modules(cfg, params, mods: List[PrunableModule]
 def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
                    damp: float = 1e-4, verbose: bool = False,
                    batched: bool = True, use_kernel: bool = False,
+                   compact: bool = False,
                    max_batch: int = 16) -> Dict[str, ModuleDB]:
     """max_batch bounds how many modules of one shape group run under a
     single vmap, capping device memory at max_batch x (Hinv + snapshot
-    stack) instead of the whole group (L, or L*E for MoE)."""
+    stack) instead of the whole group (L, or L*E for MoE).
+
+    ``compact=True`` routes Algorithm 1 through the live-set-compacted
+    core (obs.prune_structured[_batched]_compact): identical pruning
+    orders, snapshots scattered back to original row layout before
+    ``_finish_module_db``, ~the live set's bandwidth instead of the dense
+    (d_in, d_in) downdate per step."""
     mods = registry(cfg)
     db: Dict[str, ModuleDB] = {}
     if not batched:
         for mod in mods:
             db[mod.name] = build_module_db(cfg, params, mod,
-                                           hessians[mod.name], damp)
+                                           hessians[mod.name], damp,
+                                           compact=compact)
     else:
+        prune_batched = (prune_structured_batched_compact if compact
+                         else prune_structured_batched)
         for key, gmods in group_modules(cfg, params, mods):
             gs, n, _, levels = key
             for lo in range(0, len(gmods), max_batch):
@@ -119,7 +131,7 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
                                               jnp.float32) for m in chunk])
                 H = build_hessian(Hraw, damp)
                 Hinv = jnp.linalg.inv(H)
-                res = prune_structured_batched(
+                res = prune_batched(
                     Ws, Hinv, group_size=gs, n_remove=max(levels),
                     levels=levels, use_kernel=use_kernel)
                 bases = module_drop_errors(Ws, Hraw)
@@ -175,14 +187,20 @@ class SnapshotCache:
 
     def __init__(self, cfg, db: Dict[str, ModuleDB]):
         self.cfg = cfg
-        self._kinds: Dict[str, dict] = {}
-        by_kind: Dict[str, List[ModuleDB]] = {}
+        # modules stack per (kind, level grid): modules of one kind can
+        # carry different grids (heterogeneous configs / hand-built DBs),
+        # and a shared searchsorted over the wrong grid would stitch the
+        # wrong snapshot index — each grid gets its own gather + scatter
+        self._groups: Dict[tuple, dict] = {}
+        by_key: Dict[tuple, List[ModuleDB]] = {}
         for mdb in db.values():
-            by_kind.setdefault(mdb.mod.kind, []).append(mdb)
-        for kind, mdbs in by_kind.items():
-            self._kinds[kind] = {
+            key = (mdb.mod.kind, tuple(np.asarray(mdb.levels).tolist()))
+            by_key.setdefault(key, []).append(mdb)
+        for (kind, levels), mdbs in by_key.items():
+            self._groups[(kind, levels)] = {
+                "kind": kind,
                 "names": [m.mod.name for m in mdbs],
-                "levels": np.asarray(mdbs[0].levels),
+                "levels": np.asarray(levels),
                 "layer_idx": jnp.asarray([m.mod.layer for m in mdbs],
                                          jnp.int32),
                 "expert_idx": jnp.asarray([m.mod.expert for m in mdbs],
@@ -193,14 +211,15 @@ class SnapshotCache:
 
     def covers(self, assignment: Dict[str, int]) -> bool:
         return all(n in assignment
-                   for e in self._kinds.values() for n in e["names"])
+                   for e in self._groups.values() for n in e["names"])
 
     def apply(self, params, assignment: Dict[str, int]):
         """Device-side equivalent of apply_assignment for a full
         per-module level assignment."""
         new = jax.tree.map(lambda a: a, params)  # shallow-ish copy of dicts
         layers = new["layers"]
-        for kind, e in self._kinds.items():
+        for e in self._groups.values():
+            kind = e["kind"]
             lvl = np.asarray([assignment[n] for n in e["names"]])
             lvl_idx = jnp.asarray(np.searchsorted(e["levels"], lvl),
                                   jnp.int32)

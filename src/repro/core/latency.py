@@ -45,8 +45,20 @@ class LatencyTable:
 
     def runtime_of(self, assignment: Dict[str, int], mods=None,
                    cfg=None) -> float:
-        """assignment: module name -> structures removed."""
-        mods = mods or []
+        """assignment: module name -> structures removed.
+
+        The module registry can come from ``mods`` directly or be derived
+        from ``cfg``; one of the two is required to map names to kinds
+        whenever the assignment is non-empty."""
+        if mods is None:
+            if cfg is not None:
+                mods = registry(cfg)
+            elif assignment:
+                raise ValueError(
+                    "runtime_of needs the module registry to map names to "
+                    "kinds: pass mods=registry(cfg) or cfg=")
+            else:
+                mods = []  # empty assignment: base runtime alone
         by_name = {m.name: m for m in mods}
         t = self.base
         for name, removed in assignment.items():
@@ -71,15 +83,15 @@ def _kinds_for(cfg) -> List[str]:
 
 
 def _grid_for(cfg, kind: str) -> np.ndarray:
-    if kind == "attn":
-        n = cfg.num_kv_heads
-        return np.arange(n + 1)
-    if kind == "ssm":
-        return np.arange(cfg.ssm_heads + 1)
-    n = cfg.d_ff
-    sizes = sorted({int(np.ceil(n * 0.9 ** i)) for i in range(43)} | {0},
-                   reverse=True)
-    return np.asarray([n - s for s in sizes])
+    """Level grid for a module kind — delegated to the database's own
+    ``structures.level_grid`` (via the registry) so the latency table and
+    the pruning database can never disagree on what a level means (a
+    previous copy re-implemented the 0.9^i FFN grid with its own
+    hardcoded step count)."""
+    for m in registry(cfg):
+        if m.kind == kind:
+            return np.asarray(level_grid(m))
+    raise ValueError(f"no prunable modules of kind {kind!r} in {cfg.name}")
 
 
 def build_costmodel_table(cfg, env: cm.InferenceEnv) -> LatencyTable:
@@ -109,6 +121,40 @@ def build_costmodel_table(cfg, env: cm.InferenceEnv) -> LatencyTable:
 # observable measurement-effort counters: a latency-cache hit must perform
 # zero timing work (tests/test_latency_cache.py asserts on the deltas)
 TIMING_STATS = {"calls": 0, "reps": 0}
+
+
+def _attn_timing_module(cfg, env: cm.InferenceEnv, groups: int, key, dt):
+    """The (fn, args) pair wall-clocked for one attention sparsity level:
+    all three q/k/v input projections, GQA repeat, softmax(QK^T)V, and the
+    out-projection.
+
+    Split out of ``build_measured_table`` so tests can assert the module
+    really computes the V projection — a previous inline version reused
+    the K matmul (``v = k``, no wv weight at all), undercounting dense
+    attention time in every measured table and skewing the SPDY budgets
+    built from it.
+    """
+    hq = groups * cfg.q_per_kv
+    dh = cfg.resolved_head_dim
+    x = jax.random.normal(key, (env.tokens, cfg.d_model), dt)
+    wq = jnp.zeros((cfg.d_model, hq * dh), dt)
+    wk = jnp.zeros((cfg.d_model, groups * dh), dt)
+    wv = jnp.zeros((cfg.d_model, groups * dh), dt)
+    wo = jnp.zeros((hq * dh, cfg.d_model), dt)
+
+    def attn_mod(x, wq, wk, wv, wo, _hq=hq, _dh=dh, _g=groups,
+                 _b=env.batch):
+        q = (x @ wq).reshape(_b, -1, _hq, _dh)
+        k = (x @ wk).reshape(_b, -1, _g, _dh)
+        v = (x @ wv).reshape(_b, -1, _g, _dh)
+        kr = jnp.repeat(k, _hq // _g, 2)
+        vr = jnp.repeat(v, _hq // _g, 2)
+        lg = jnp.einsum("bqhd,bkhd->bhqk", q, kr)
+        p = jax.nn.softmax(lg.astype(jnp.float32), -1).astype(dt)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+        return (o.reshape(x.shape[0], -1) @ wo)
+
+    return attn_mod, (x, wq, wk, wv, wo)
 
 
 def _time_fn(fn, *args, reps: int = 5) -> float:
@@ -142,30 +188,12 @@ def build_measured_table(cfg, env: cm.InferenceEnv, *,
         for removed in grid:
             if kind == "attn":
                 groups = int(cfg.num_kv_heads - removed)
-                hq = groups * cfg.q_per_kv
-                dh = cfg.resolved_head_dim
                 if groups == 0:
                     ts.append(0.0)
                     continue
-                x = jax.random.normal(key, (t_tok, cfg.d_model), dt)
-                wq = jnp.zeros((cfg.d_model, hq * dh), dt)
-                wk = jnp.zeros((cfg.d_model, groups * dh), dt)
-                wo = jnp.zeros((hq * dh, cfg.d_model), dt)
-
-                @jax.jit
-                def attn_mod(x, wq, wk, wo, _s=env.seq, _hq=hq, _dh=dh,
-                             _g=groups, _mode=env.mode, _b=env.batch):
-                    q = (x @ wq).reshape(_b, -1, _hq, _dh)
-                    k = (x @ wk).reshape(_b, -1, _g, _dh)
-                    v = k
-                    kr = jnp.repeat(k, _hq // _g, 2)
-                    vr = jnp.repeat(v, _hq // _g, 2)
-                    lg = jnp.einsum("bqhd,bkhd->bhqk", q, kr)
-                    p = jax.nn.softmax(lg.astype(jnp.float32), -1).astype(dt)
-                    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
-                    return (o.reshape(x.shape[0], -1) @ wo)
-
-                ts.append(_time_fn(attn_mod, x, wq, wk, wo, reps=reps))
+                attn_mod, args = _attn_timing_module(cfg, env, groups,
+                                                     key, dt)
+                ts.append(_time_fn(jax.jit(attn_mod), *args, reps=reps))
             else:
                 if kind == "ssm":
                     f_live = int(cfg.ssm_heads - removed) * cfg.ssm_head_dim

@@ -63,7 +63,10 @@ from ..checkpoint.manager import atomic_write_json, load_json
 from ..runtime import costmodel as cm
 from .latency import LatencyTable
 
-FORMAT_VERSION = 1
+# v2: measured attention modules gained the previously-missing V
+# projection (v = k reused the K matmul) — every v1 table undercounts
+# dense attention time, so v1 files are misses and get re-measured
+FORMAT_VERSION = 2
 
 
 def _canon(obj) -> str:

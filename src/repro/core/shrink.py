@@ -3,7 +3,9 @@
 Row-structures zeroed in the out-side matrix make twin weights dead:
   * attn:  removed KV groups -> slice q/k/v projection columns + wo rows
   * ffn:   removed FC2 rows  -> slice wg/wu (or wi/bi) columns + wd rows
-  * moe:   per-expert as ffn; fully dropped experts leave the router
+  * moe:   per-expert as ffn; fully dropped experts keep their router
+           column (top-k routing must match the masked model) but carry
+           no weights and cost no FLOPs
   * ssm:   removed SSD heads -> slice in_proj (z/x/dt), conv, A/D/dt_bias,
            gated-norm and out_proj rows
 
@@ -124,13 +126,20 @@ def shrink(cfg, params, db: Dict[str, ModuleDB],
         ename = f"L{l}.expert0"
         if ename in assignment:
             experts = []
-            router_cols = []
             mp = layers_p["moe"]
             for e in range(cfg.num_experts):
                 mdb = db[f"L{l}.expert{e}"]
                 removed = assignment[f"L{l}.expert{e}"]
                 kept = mdb.kept_structures(removed)
                 if len(kept) == 0:
+                    # fully-dropped expert: must stay visible to the
+                    # router — deleting its column would change which
+                    # experts win top-k (and the weight normalization)
+                    # vs the masked model, breaking the same-outputs
+                    # contract — but it carries no weights and the
+                    # pruned forward skips its compute entirely
+                    experts.append(None)
+                    lcfg.expert_ff.append(0)
                     continue
                 snap = _np(mdb.weights_at(removed)).astype(np.float32)
                 experts.append({
@@ -138,14 +147,15 @@ def shrink(cfg, params, db: Dict[str, ModuleDB],
                     "wu": jnp.asarray(_np(mp["wu"][l, e])[:, kept]),
                     "wd": jnp.asarray(snap[kept, :]),
                 })
-                router_cols.append(e)
                 lcfg.expert_ff.append(len(kept))
-            if experts:
+            if any(ep is not None for ep in experts):
                 lp["moe"] = {
-                    "router": jnp.asarray(_np(mp["router"][l])[:, router_cols]),
+                    "router": jnp.asarray(_np(mp["router"][l])),
                     "experts": experts,
                 }
                 lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
+            else:
+                lcfg.expert_ff = []  # whole MoE module dropped
 
         lcfg.params = lp
         out_layers.append(lcfg)

@@ -42,13 +42,25 @@ def _downdate_kernel(w_ref, h_ref, a_ref, kw_ref, kh_ref, krow_ref,
 def obs_downdate_kernel(W: jnp.ndarray, Hinv: jnp.ndarray,
                         HcolS: jnp.ndarray, KsWS: jnp.ndarray,
                         KsHcolT: jnp.ndarray, keep: jnp.ndarray, *,
-                        block_d: int = 256, interpret: bool = True):
+                        block_d: int = 256, interpret: bool = True,
+                        d_live: int | None = None):
     """(W, Hinv, HcolS, KsWS, KsHcolT, keep) -> (W_new, Hinv_new).
 
     Shapes as in kernels.ref.obs_downdate_ref. d_in is padded up to a
     block_d multiple internally (padded keep rows are 0, so the padding
     never leaks into the live block).
+
+    ``d_live`` (static) restricts the grid to the live prefix produced by
+    live-set compaction: only ceil(d_live / block_d) row strips are
+    streamed, the dead [d_live, d_in) tail is written back as zeros
+    without ever entering VMEM.
     """
+    if d_live is not None and d_live < W.shape[0]:
+        from .ref import live_prefix_downdate
+        return live_prefix_downdate(
+            functools.partial(obs_downdate_kernel, block_d=block_d,
+                              interpret=interpret),
+            W, Hinv, HcolS, KsWS, KsHcolT, keep, d_live)
     d_in, d_out = W.shape
     gs = HcolS.shape[1]
     block_d = min(block_d, d_in)

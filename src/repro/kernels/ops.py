@@ -47,16 +47,20 @@ def hessian_accum(x, acc=None, *, block_d=256, block_n=512, interpret=None):
                                 interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret",
+                                             "d_live"))
 def obs_downdate(W, Hinv, HcolS, KsWS, KsHcolT, keep, *, block_d=256,
-                 interpret=None):
+                 interpret=None, d_live=None):
     """Fused OBS rank-gs W/Hinv downdate (see kernels.obs_downdate).
 
-    Semantics match kernels.ref.obs_downdate_ref exactly.
+    Semantics match kernels.ref.obs_downdate_ref exactly, including the
+    static ``d_live`` live-prefix restriction used by live-set compaction
+    (rows/cols >= d_live are dead and come back zero).
     """
     interpret = _default_interpret() if interpret is None else interpret
     return obs_downdate_kernel(W, Hinv, HcolS, KsWS, KsHcolT, keep,
-                               block_d=block_d, interpret=interpret)
+                               block_d=block_d, interpret=interpret,
+                               d_live=d_live)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "head_block",

@@ -39,7 +39,21 @@ def hessian_ref(x):
     return xf.T @ xf
 
 
-def obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep):
+def live_prefix_downdate(fn, W, Hinv, HcolS, KsWS, KsHcolT, keep,
+                         d_live: int):
+    """Run a full-size OBS downdate ``fn`` on the [0, d_live) live prefix
+    and zero-pad the dead tail back. One shared prologue for the jnp
+    oracle and the Pallas wrapper so the prefix semantics cannot diverge
+    between the twins."""
+    d_in = W.shape[0]
+    tail = d_in - d_live
+    Wl, Hl = fn(W[:d_live], Hinv[:d_live, :d_live], HcolS[:d_live], KsWS,
+                KsHcolT[:, :d_live], keep[:d_live])
+    return (jnp.pad(Wl, ((0, tail), (0, 0))),
+            jnp.pad(Hl, ((0, tail), (0, tail))))
+
+
+def obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep, d_live=None):
     """Fused OBS rank-gs downdate (the jnp oracle of kernels.obs_downdate).
 
     W:      (d_in, d_out)   current weights
@@ -48,10 +62,17 @@ def obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep):
     KsWS:   (gs, d_out)     (Hinv[S,S])^-1 W[S,:]
     KsHcolT:(gs, d_in)      (Hinv[S,S])^-1 Hinv[S,:]
     keep:   (d_in,)         {0,1} row mask AFTER removing S
+    d_live: static live-prefix length (live-set compaction): rows/cols
+            >= d_live are guaranteed already-zero, so the downdate only
+            touches the (d_live, ·) prefix and writes the tail back as
+            zeros. None (or d_in) processes the full matrices.
 
     Returns (W - HcolS @ KsWS) and (Hinv - HcolS @ KsHcolT), both with the
     keep mask re-applied (rows for W, rows+cols for Hinv).
     """
+    if d_live is not None and d_live < W.shape[0]:
+        return live_prefix_downdate(obs_downdate_ref, W, Hinv, HcolS,
+                                    KsWS, KsHcolT, keep, d_live)
     Wf = W.astype(jnp.float32)
     Hf = Hinv.astype(jnp.float32)
     A = HcolS.astype(jnp.float32)

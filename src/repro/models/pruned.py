@@ -64,23 +64,26 @@ def _ffn_forward(cfg, lp, x):
 
 
 def _moe_forward(cfg, lcfg: PrunedLayer, lp, x):
-    """Pruned MoE: per-expert widths differ; dropped experts removed from
-    the router. Dense-gather dispatch per expert (unrolled; expert count is
-    small after pruning)."""
+    """Pruned MoE: per-expert widths differ. Fully-dropped experts keep
+    their router column and hold a ``None`` compute slot, so the top-k
+    selection (and the normalization over the selected weights) is exactly
+    the masked model's — a dead expert can still win a top-k slot and
+    absorb routing weight, it just contributes nothing. Dense-gather
+    dispatch per live expert (unrolled; few experts after pruning)."""
     dt = x.dtype
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
-    n_exp = len(lcfg.expert_ff)
-    k = min(cfg.num_experts_per_tok, n_exp)
     logits = (xf @ lp["router"].astype(dt)).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
+    k = min(cfg.num_experts_per_tok, probs.shape[-1])
     topw, topi = jax.lax.top_k(probs, k)
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
     out = jnp.zeros((t, d), dt)
-    for e in range(n_exp):
+    for e, ep in enumerate(lp["experts"]):
+        if ep is None:  # dropped: routable, zero contribution, no FLOPs
+            continue
         w_e = jnp.where(topi == e, topw, 0.0).sum(-1).astype(dt)  # (t,)
-        ep = lp["experts"][e]
         h = jax.nn.silu(xf @ ep["wg"].astype(dt)) * (xf @ ep["wu"].astype(dt))
         out = out + w_e[:, None] * (h @ ep["wd"].astype(dt))
     return out.reshape(b, s, d)

@@ -57,6 +57,29 @@ def test_batched_matches_per_module(tiny_cfg, tiny_params, max_batch):
         assert np.isclose(a.base_norm, b.base_norm, rtol=1e-5)
 
 
+@pytest.mark.parametrize("compact_serial", [False, True])
+def test_compact_db_matches_batched(tiny_cfg, tiny_params, compact_serial):
+    """The live-set-compacted engine (batched and serial routes) builds
+    the same database as the PR-1 batched path: identical pruning orders,
+    fp16-tolerance snapshots."""
+    hess = _rand_hessians(tiny_cfg, seed=4)
+    db_ref = build_database(tiny_cfg, tiny_params, hess, batched=True)
+    db_c = build_database(tiny_cfg, tiny_params, hess,
+                          batched=not compact_serial, compact=True)
+    assert list(db_ref) == list(db_c)
+    for name in db_ref:
+        a, b = db_ref[name], db_c[name]
+        np.testing.assert_array_equal(a.levels, b.levels)
+        np.testing.assert_array_equal(a.order, b.order, err_msg=name)
+        np.testing.assert_allclose(a.errors, b.errors, rtol=1e-4,
+                                   atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(a.priors, b.priors, rtol=1e-4,
+                                   atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(
+            a.snapshots.astype(np.float32), b.snapshots.astype(np.float32),
+            atol=2e-3, rtol=2e-3, err_msg=name)
+
+
 @pytest.mark.parametrize("shape", [(16, 8, 2, 8), (96, 64, 16, 32),
                                    (33, 7, 1, 16), (130, 12, 5, 64)])
 def test_obs_downdate_kernel_matches_ref(shape):
@@ -76,6 +99,43 @@ def test_obs_downdate_kernel_matches_ref(shape):
                                atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
                                atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(96, 24, 4, 64, 32), (130, 12, 1, 96, 64),
+                                   (64, 16, 8, 32, 16)])
+def test_obs_downdate_d_live_prefix(shape):
+    """With dead (zero) rows/cols beyond d_live, the prefix-restricted
+    downdate equals the full one — on the ref oracle and the kernel."""
+    d_in, d_out, gs, d_live, block_d = shape
+    rng = np.random.default_rng(d_live)
+
+    def dead_tail(a, rows=True, cols=False):
+        a = np.asarray(a)
+        if rows:
+            a[d_live:] = 0.0
+        if cols and a.ndim == 2:
+            a[..., d_live:] = 0.0
+        return jnp.asarray(a, jnp.float32)
+
+    W = dead_tail(rng.standard_normal((d_in, d_out)))
+    H = rng.standard_normal((d_in, d_in))
+    Hinv = dead_tail(H @ H.T, cols=True)
+    HcolS = dead_tail(rng.standard_normal((d_in, gs)))
+    KsWS = jnp.asarray(rng.standard_normal((gs, d_out)), jnp.float32)
+    KsHcolT = dead_tail(rng.standard_normal((gs, d_in)).T).T
+    keep = dead_tail(rng.random(d_in) > 0.3)
+
+    w_f, h_f = ref.obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep)
+    w_r, h_r = ref.obs_downdate_ref(W, Hinv, HcolS, KsWS, KsHcolT, keep,
+                                    d_live=d_live)
+    w_k, h_k = ops.obs_downdate(W, Hinv, HcolS, KsWS, KsHcolT, keep,
+                                d_live=d_live, block_d=block_d,
+                                interpret=True)
+    for got_w, got_h in [(w_r, h_r), (w_k, h_k)]:
+        np.testing.assert_allclose(np.asarray(got_w), np.asarray(w_f),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(got_h), np.asarray(h_f),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_snapshot_cache_matches_host_apply(tiny_cfg, tiny_params):
@@ -108,6 +168,44 @@ def test_snapshot_cache_partial_assignment_falls_back(tiny_cfg,
     w = np.asarray(db[name].weights_at(partial[name]), np.float32)
     got = np.asarray(p["layers"]["attn"]["wo"][0])
     np.testing.assert_array_equal(got, w)
+
+
+def test_snapshot_cache_heterogeneous_grids(tiny_cfg, tiny_params):
+    """Modules of one kind with *different* level grids: each must be
+    stitched against its own grid — a single shared grid per kind maps
+    some assignments to the wrong snapshot index."""
+    from repro.core.database import ModuleDB
+    from repro.core.structures import PrunableModule
+
+    d_in, d_out = tiny_cfg.d_ff, tiny_cfg.d_model
+    rng = np.random.default_rng(7)
+
+    def mk(layer, levels):
+        mod = PrunableModule(name=f"L{layer}.ffn", kind="ffn", layer=layer,
+                             weight_key="wd", capture_key="wd_in",
+                             group_size=1, n_structures=d_in)
+        snaps = rng.standard_normal(
+            (len(levels), d_in, d_out)).astype(np.float16)
+        return ModuleDB(mod=mod, levels=np.asarray(levels),
+                        snapshots=snaps,
+                        errors=np.linspace(0.0, 1.0, len(levels)),
+                        priors=np.linspace(0.0, 1.0, len(levels)),
+                        base_norm=1.0,
+                        order=np.arange(d_in, dtype=np.int32))
+
+    # same grid length (so a naive shared stack still builds) but
+    # different values: level 32 is index 2 on L1's grid, index 1 on L0's
+    db = {"L0.ffn": mk(0, [0, 64, 96, 128]),
+          "L1.ffn": mk(1, [0, 16, 32, 128])}
+    cache = SnapshotCache(tiny_cfg, db)
+    assignment = {"L0.ffn": 96, "L1.ffn": 32}
+    assert cache.covers(assignment)
+    p_host = apply_assignment(tiny_cfg, tiny_params, db, assignment)
+    p_dev = apply_assignment(tiny_cfg, tiny_params, db, assignment,
+                             cache=cache)
+    np.testing.assert_array_equal(
+        np.asarray(p_host["layers"]["ffn"]["wd"]),
+        np.asarray(p_dev["layers"]["ffn"]["wd"]))
 
 
 def test_fused_hessian_collect_matches_reference(tiny_cfg, tiny_params,

@@ -61,6 +61,30 @@ def test_shrink_module_drop():
     assert pm.layers[1].kv_groups == 0  # module physically gone
 
 
+def test_shrink_moe_full_expert_drop_matches_masked():
+    """Fully dropping an expert must not change top-k routing: in the
+    masked model the dead expert still has a router column (it can win a
+    top-k slot, absorb routing weight, and contribute zero) — the shrunk
+    model has to reproduce that, not delete the column and re-route."""
+    cfg = smoke_config("dbrx-132b").replace(dtype="float32")
+
+    def asgn(mods):
+        a = {}
+        for m in mods:
+            if m.kind == "moe":
+                a[m.name] = m.n_structures if m.expert == 0 else 60
+            else:
+                a[m.name] = 1
+        return a
+
+    pm = _check(cfg, asgn)
+    for lcfg in pm.layers:
+        # dead expert: routable but weightless, live experts shrunk
+        assert lcfg.expert_ff[0] == 0
+        assert lcfg.params["moe"]["experts"][0] is None
+        assert lcfg.params["moe"]["router"].shape[1] == cfg.num_experts
+
+
 @pytest.mark.parametrize("arch,asgn", [
     ("qwen2-72b", lambda m: 1 if m.kind == "attn" else 90),    # GQA
     ("mamba2-2.7b", lambda m: 3),                              # SSD heads

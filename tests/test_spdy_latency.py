@@ -1,10 +1,13 @@
 """Latency tables + structured SPDY: runtime guarantees and inference-
 awareness (paper §3.2)."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import BERT_BASE, GPT2_SMALL
-from repro.core.latency import build_table
+from repro.configs import ARCHS, BERT_BASE, GPT2_SMALL
+from repro.core.latency import (_attn_timing_module, _grid_for, _kinds_for,
+                                build_table)
 from repro.core.structures import level_grid, registry
 from repro.runtime.costmodel import (TPU_V5E, InferenceEnv, attn_time,
                                      ffn_time, matmul_time)
@@ -67,6 +70,66 @@ def test_spdy_meets_budget_and_beats_uniform(trained_tiny, tiny_cfg,
     uni = uniform_assignment(tiny_cfg, tab, 2.0)
     uni_loss = loss(apply_assignment(tiny_cfg, params, db, uni))
     assert res.score <= uni_loss + 1e-3
+
+
+def test_runtime_of_mods_optional():
+    """runtime_of must work from cfg alone (the old ``mods = mods or []``
+    then ``by_name[name]`` raised KeyError whenever mods was omitted)."""
+    cfg = BERT_BASE
+    env = InferenceEnv(batch=8, seq=64, mode="prefill")
+    tab = build_table(cfg, env, backend="costmodel")
+    mods = registry(cfg)
+    assignment = {m.name: int(level_grid(m)[1]) for m in mods}
+    want = tab.runtime_of(assignment, mods=mods)
+    got = tab.runtime_of(assignment, cfg=cfg)
+    assert got == pytest.approx(want)
+    with pytest.raises(ValueError, match="registry"):
+        tab.runtime_of(assignment)  # neither mods nor cfg: clear error
+    # degenerate case needs no registry: empty assignment = base runtime
+    assert tab.runtime_of({}) == pytest.approx(tab.base)
+
+
+def test_latency_grids_match_database_grids():
+    """The latency table's level grid and the pruning database's level
+    grid must agree for every config — including small-d_ff models where
+    a separately-hardcoded 0.9^i grid diverges from level_grid's
+    exhaustive small-module grid."""
+    narrow = GPT2_SMALL.replace(name="gpt2-narrow-ffn", num_layers=2,
+                                d_ff=48)
+    for cfg in list(ARCHS.values()) + [narrow]:
+        mods = registry(cfg)
+        for kind in _kinds_for(cfg):
+            grid = _grid_for(cfg, kind).tolist()
+            kmods = [m for m in mods if m.kind == kind]
+            assert kmods, (cfg.name, kind)
+            for m in kmods[:3]:
+                assert grid == level_grid(m), (cfg.name, kind, m.name)
+
+
+def test_measured_attn_module_times_v_projection():
+    """The measured-backend attention module must compute all three input
+    projections — a past version reused K for V (``v = k``, no wv weight),
+    undercounting dense attention in every measured table."""
+    cfg = GPT2_SMALL.replace(num_layers=2, d_model=64, d_ff=128,
+                             num_heads=4, num_kv_heads=4, head_dim=16,
+                             vocab_size=256, dtype="float32")
+    env = InferenceEnv(batch=2, seq=16, mode="prefill")
+    fn, args = _attn_timing_module(cfg, env, 4, jax.random.key(0),
+                                   jnp.float32)
+    x, wq, wk, wv, wo = args
+    assert wv.shape == (cfg.d_model, 4 * cfg.resolved_head_dim)
+    # q, k, v input projections + qk logits + attn@v + out projection
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    dots = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "dot_general"]
+    assert len(dots) == 6
+    # and the output really depends on the V weight
+    ks = jax.random.split(jax.random.key(1), 3)
+    xr = jax.random.normal(ks[0], x.shape, x.dtype)
+    wv_r = jax.random.normal(ks[1], wv.shape, wv.dtype)
+    wo_r = jax.random.normal(ks[2], wo.shape, wo.dtype)
+    out_a = fn(xr, wq, wk, wv_r, wo_r)
+    out_b = fn(xr, wq, wk, 2.0 * wv_r, wo_r)
+    assert float(jnp.max(jnp.abs(out_a - out_b))) > 1e-6
 
 
 def test_level_grid_follows_paper():
