@@ -21,6 +21,8 @@ used V100/A100 measurements (DESIGN.md §3).
             vs the PR-1 batched path; appended to BENCH_db.json
   spdy_eval device-resident SnapshotCache assignment stitching vs host
             per-module snapshot uploads; appended to BENCH_db.json
+  spdy_search  population-batched multi-target SPDY search vs the frozen
+            PR-3 serial loop at equal steps; appended to BENCH_db.json
   calib_shard  mesh-sharded collect_hessians vs single-device on a forced
             2-device CPU mesh (subprocess); appended to BENCH_db.json
   latency_cache  measured-table build cold vs warm (persistent cache hit);
@@ -568,6 +570,176 @@ def bench_spdy_eval():
         f"speedup={speedup:.1f}x")
 
 
+# Frozen copy of the PR-3 SPDY search loop (commit 89ae7cf): one strictly
+# serial host step per candidate — scalar DP, fresh stitch + loss + blocking
+# float() sync every step, no score memo, run from scratch per target. Kept
+# verbatim as the spdy_search baseline so the engine speedup is tracked
+# across PRs.
+def _pr3_search(db, table, target_speedup, *, steps, mutate_frac=0.1,
+                nbins=1024, eval_fn=None, seed=0):
+    from repro.core.spdy import SearchResult, dp_select
+    rng = np.random.default_rng(seed)
+    names = list(db.keys())
+    priors = [db[n].priors.astype(np.float64) for n in names]
+    times = [table.level_times(db[n].mod).astype(np.float64) for n in names]
+    dense = table.base + sum(t[0] for t in times)
+    budget = dense / target_speedup - table.base
+
+    def assemble(choices):
+        return {n: int(db[n].levels[c]) for n, c in zip(names, choices)}
+
+    def runtime(choices):
+        return table.base + sum(t[c] for t, c in zip(times, choices))
+
+    coeffs = np.ones(len(names))
+    best = None
+    for step in range(steps):
+        if step == 0:
+            cand_coeffs = coeffs
+        else:
+            cand_coeffs = coeffs.copy()
+            mask = rng.random(len(names)) < mutate_frac
+            if not mask.any():
+                mask[rng.integers(len(names))] = True
+            cand_coeffs[mask] *= np.exp(rng.normal(0, 0.6, mask.sum()))
+        costs = [c * p for c, p in zip(cand_coeffs, priors)]
+        choices, _ = dp_select(costs, times, budget, nbins)
+        if choices is None:
+            continue
+        assignment = assemble(choices)
+        score = (eval_fn(assignment) if eval_fn is not None
+                 else float(sum(p[c] ** 2 for p, c in zip(priors, choices))))
+        if best is None or score < best.score:
+            rt = runtime(choices)
+            best = SearchResult(assignment=assignment, runtime=rt,
+                                speedup=dense / rt, score=score,
+                                coeffs=cand_coeffs.copy())
+            coeffs = cand_coeffs
+    return best
+
+
+# Deeper tiny GPT2 for the search bench: 16 prunable modules make the DP
+# and the per-candidate stitch+eval the dominant cost, as in real models.
+SEARCH_CFG = GPT2_SMALL.replace(
+    name="gpt2-search-bench", num_layers=8, d_model=96, d_ff=384,
+    num_heads=6, num_kv_heads=6, head_dim=16, vocab_size=384,
+    dtype="float32")
+
+
+def bench_spdy_search():
+    """Population-batched SPDY search vs the frozen PR-3 serial loop at
+    equal steps, single-target and 4-target family, with the stitched-model
+    calibration loss as the candidate score (the oneshot hot path).  Also
+    times full ``oneshot_prune`` both ways and records engine serial-vs-
+    batched equivalence."""
+    from repro.core.oneshot import make_batched_eval
+    from repro.core.spdy import search, search_family
+
+    cfg = SEARCH_CFG
+    params, _ = model_init(cfg, jax.random.key(0))
+    calib = calibration_batches(cfg, 16, 64, batch=8)
+    env = InferenceEnv(batch=8, seq=64, mode="prefill")
+    # measured-on-CPU table: width moves runtime at these dims, so the DP
+    # is coefficient-sensitive (the analytic v5e table saturates here)
+    table = build_table(cfg, env, backend="measure", grid_subsample=6,
+                        reps=2, **LAT_CACHE)
+    hess = collect_hessians(cfg, params, calib)
+    db = build_database(cfg, params, hess)
+    cache = SnapshotCache(cfg, db)
+    loss = calib_loss_fn(cfg, calib[:1])
+
+    def ev(a):
+        return loss(apply_assignment(cfg, params, db, a, cache=cache))
+
+    evb = make_batched_eval(cfg, params, cache, calib[:1])
+    # a realistic target family: the whole point of the amortized engine
+    targets = [1.3, 1.5, 2.0, 3.0]
+    steps, pop = 160, 32
+
+    # warm every path (jit compiles: stitch, loss, and every power-of-two
+    # vmapped-loss bucket the chunked scorer can hit)
+    _pr3_search(db, table, 2.0, steps=2, eval_fn=ev)
+    mods = registry(cfg)
+    rngw = np.random.default_rng(9)
+    from repro.core.structures import level_grid as _lg
+    dummy = [{m.name: int(rngw.choice(_lg(m))) for m in mods}
+             for _ in range(32)]
+    for k in [1, 2, 4, 8, 16, 32]:
+        evb(dummy[:k])
+    search(db, table, 2.0, steps=4, pop=pop, batched=False, eval_fn=ev,
+           seed=1)
+
+    rec = {"config": cfg.name, "modules": len(mods),
+           "steps_per_target": steps, "pop": pop, "targets": targets}
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        return time.perf_counter() - t0, out
+
+    # single target
+    t_pr3, _ = timed(lambda: _pr3_search(db, table, 2.0, steps=steps,
+                                         eval_fn=ev, seed=0))
+    t_ser, r_ser = timed(lambda: search(
+        db, table, 2.0, steps=steps, pop=pop, batched=False, eval_fn=ev,
+        seed=0))
+    t_bat, r_bat = timed(lambda: search(
+        db, table, 2.0, steps=steps, pop=pop, batched=True, eval_fn=ev,
+        eval_batched=evb, seed=0))
+    rec["single"] = {
+        "pr3_serial_s": t_pr3, "engine_serial_s": t_ser,
+        "engine_batched_s": t_bat,
+        "speedup_vs_pr3": t_pr3 / max(t_bat, 1e-12),
+        "speedup_vs_engine_serial": t_ser / max(t_bat, 1e-12),
+        "pr3_steps_per_s": steps / max(t_pr3, 1e-12),
+        "batched_steps_per_s": steps / max(t_bat, 1e-12),
+        "assignments_equal": r_ser.assignment == r_bat.assignment,
+        "unique_evals": r_bat.n_evals}
+
+    # 4-target family at equal steps: serial = one PR-3 search per target
+    # (the old oneshot loop), batched = one shared-pool family pass
+    t_pr3f, _ = timed(lambda: [
+        _pr3_search(db, table, t, steps=steps, eval_fn=ev, seed=0)
+        for t in targets])
+    t_serf, f_ser = timed(lambda: search_family(
+        db, table, targets, steps=steps, pop=pop, batched=False,
+        eval_fn=ev, seed=0))
+    t_batf, f_bat = timed(lambda: search_family(
+        db, table, targets, steps=steps, pop=pop, batched=True,
+        eval_fn=ev, eval_batched=evb, seed=0))
+    rec["family"] = {
+        "pr3_serial_s": t_pr3f, "engine_serial_s": t_serf,
+        "engine_batched_s": t_batf,
+        "speedup_vs_pr3": t_pr3f / max(t_batf, 1e-12),
+        "speedup_vs_engine_serial": t_serf / max(t_batf, 1e-12),
+        "pr3_steps_per_s": len(targets) * steps / max(t_pr3f, 1e-12),
+        "batched_steps_per_s": len(targets) * steps / max(t_batf, 1e-12),
+        "assignments_equal": all(
+            f_ser[t].assignment == f_bat[t].assignment for t in targets),
+        "scores_equal": all(
+            abs(f_ser[t].score - f_bat[t].score) < 1e-9 for t in targets),
+        "unique_evals": f_bat[targets[0]].n_evals}
+
+    # end-to-end oneshot_prune (hessians + db + table + family search)
+    kw = dict(targets=targets, latency_backend="measure",
+              latency_kw={**LAT_CACHE, "grid_subsample": 6, "reps": 2},
+              search_steps=steps, search_pop=pop, seed=0)
+    t_os_s, _ = timed(lambda: oneshot_prune(cfg, params, calib, env,
+                                            search_batched=False, **kw))
+    t_os_b, _ = timed(lambda: oneshot_prune(cfg, params, calib, env,
+                                            search_batched=True, **kw))
+    rec["oneshot"] = {"engine_serial_s": t_os_s, "engine_batched_s": t_os_b,
+                      "speedup": t_os_s / max(t_os_b, 1e-12)}
+
+    _write_bench_db({"spdy_search": rec})
+    row("spdy_search", t_batf * 1e6,
+        f"family: pr3={t_pr3f:.1f}s serial={t_serf:.1f}s "
+        f"batched={t_batf:.1f}s speedup={rec['family']['speedup_vs_pr3']:.1f}x "
+        f"({rec['family']['batched_steps_per_s']:.0f} steps/s) "
+        f"single: {rec['single']['speedup_vs_pr3']:.1f}x "
+        f"equal={rec['family']['assignments_equal']}")
+
+
 _CALIB_SHARD_SCRIPT = r"""
 import json, time
 import jax
@@ -681,6 +853,7 @@ BENCHES = {
     "db_build": bench_db_build,
     "db_build_compact": bench_db_build_compact,
     "spdy_eval": bench_spdy_eval,
+    "spdy_search": bench_spdy_search,
     "calib_shard": bench_calib_shard,
     "latency_cache": bench_latency_cache,
     "roofline": bench_roofline,
@@ -688,7 +861,8 @@ BENCHES = {
 
 # benches that run on synthetic weights/hessians; no tiny-GPT2 training
 _NO_TRAIN = {"table7", "table3", "kernels", "db_build", "db_build_compact",
-             "spdy_eval", "calib_shard", "latency_cache", "roofline"}
+             "spdy_eval", "spdy_search", "calib_shard", "latency_cache",
+             "roofline"}
 
 
 def main(argv=None) -> None:

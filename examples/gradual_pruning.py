@@ -67,8 +67,8 @@ def main():
     variants = gradual_prune(cfg, state.params, env, [1.5, 2.0, 3.0],
                              synthetic_stream(cfg, batch, seq, seed=99),
                              calib, tcfg=ft_cfg, finetune_steps=ft_steps,
-                             search_steps=25, ckpt_dir=args.ckpt,
-                             verbose=True)
+                             search_steps=25, search_pop=16, seed=0,
+                             ckpt_dir=args.ckpt, verbose=True)
     print("\nfamily:")
     for v in variants:
         print(f"  {v.target}x -> {v.achieved:.2f}x  "

@@ -44,9 +44,11 @@ def main():
     env = InferenceEnv(batch=16, seq=128, mode="prefill")
     calib = calibration_batches(cfg, 32, 64, batch=8)
 
-    # 3) one run -> the whole family, each with a speedup guarantee
+    # 3) one run -> the whole family, each with a speedup guarantee; the
+    # SPDY search is one population-batched pass shared by all targets
+    # (per-round vectorized DP + one vmapped stitched-model eval)
     res = oneshot_prune(cfg, params, calib, env, targets=[1.5, 2.0, 3.0],
-                        search_steps=40, verbose=False)
+                        search_steps=40, search_pop=16, verbose=False)
     print(f"\ndense loss {res.dense_loss:.4f}")
     for t, v in sorted(res.variants.items()):
         pm = shrink(cfg, v.params, res.db, v.assignment)

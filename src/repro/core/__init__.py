@@ -6,5 +6,6 @@ from .latency import LatencyTable, build_table
 from .obs import (build_hessian, module_drop_error, prune_structured,
                   prune_structured_compact)
 from .oneshot import OneShotResult, PrunedVariant, oneshot_prune
-from .spdy import SearchResult, dp_select, search
+from .spdy import (SearchResult, dp_select, dp_select_batched, search,
+                   search_family)
 from .structures import PrunableModule, get_matrix, level_grid, registry

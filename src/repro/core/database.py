@@ -162,18 +162,32 @@ _PARAM_PATH = {"attn": ("attn", "wo"), "ssm": ("ssm", "out_proj"),
                "moe": ("moe", "wd"), "ffn": ("ffn", "wd")}
 
 
-@jax.jit
-def _stitch_layers(leaf, snaps, lvl_idx, layer_idx):
+def _stitch_layers_impl(leaf, snaps, lvl_idx, layer_idx):
     """leaf: (L, d_in, d_out) param stack; snaps: (M, n_lvl, d_in, d_out)."""
     w = snaps[jnp.arange(snaps.shape[0]), lvl_idx].astype(leaf.dtype)
     return leaf.at[layer_idx].set(w)
 
 
-@jax.jit
-def _stitch_experts(leaf, snaps, lvl_idx, layer_idx, expert_idx):
+def _stitch_experts_impl(leaf, snaps, lvl_idx, layer_idx, expert_idx):
     """leaf: (L, E, d_in, d_out); snaps: (M, n_lvl, d_in, d_out)."""
     w = snaps[jnp.arange(snaps.shape[0]), lvl_idx].astype(leaf.dtype)
     return leaf.at[layer_idx, expert_idx].set(w)
+
+
+_stitch_layers = jax.jit(_stitch_layers_impl)
+_stitch_experts = jax.jit(_stitch_experts_impl)
+
+# population-batched stitches: lvl_idx gains a leading (P,) axis; the leaf
+# is broadcast on the first group of a kind and carried batched (P, L, ...)
+# when a later group (heterogeneous level grids) stitches into it again
+_stitch_layers_pop = jax.jit(
+    jax.vmap(_stitch_layers_impl, in_axes=(None, None, 0, None)))
+_stitch_layers_pop2 = jax.jit(
+    jax.vmap(_stitch_layers_impl, in_axes=(0, None, 0, None)))
+_stitch_experts_pop = jax.jit(
+    jax.vmap(_stitch_experts_impl, in_axes=(None, None, 0, None, None)))
+_stitch_experts_pop2 = jax.jit(
+    jax.vmap(_stitch_experts_impl, in_axes=(0, None, 0, None, None)))
 
 
 class SnapshotCache:
@@ -232,6 +246,46 @@ class SnapshotCache:
                 leaf = _stitch_layers(leaf, e["snaps"], lvl_idx,
                                       e["layer_idx"])
             layers[grp][leaf_key] = leaf
+        return new
+
+    def batch_axes(self, params):
+        """``jax.vmap`` in_axes tree for an `apply_batched` result: 0 on
+        every stitched leaf, None (broadcast) everywhere else."""
+        axes = jax.tree.map(lambda _: None, params)
+        for e in self._groups.values():
+            grp, leaf_key = _PARAM_PATH[e["kind"]]
+            axes["layers"][grp][leaf_key] = 0
+        return axes
+
+    def apply_batched(self, params, assignments):
+        """Stitch P level-assignments into one stacked param tree.
+
+        Stitched leaves gain a leading (P,) axis; untouched leaves are the
+        original arrays (broadcast under ``batch_axes``).  One gather +
+        scatter per module kind for the whole population — the per-round
+        device call of the population-batched SPDY search.
+        """
+        new = jax.tree.map(lambda a: a, params)  # shallow-ish copy of dicts
+        layers = new["layers"]
+        pop_leaves = set()
+        for e in self._groups.values():
+            kind = e["kind"]
+            lvl = np.asarray([[a[n] for n in e["names"]]
+                              for a in assignments])            # (P, M)
+            lvl_idx = jnp.asarray(np.searchsorted(e["levels"], lvl),
+                                  jnp.int32)
+            grp, leaf_key = _PARAM_PATH[kind]
+            leaf = layers[grp][leaf_key]
+            carried = (grp, leaf_key) in pop_leaves
+            if kind == "moe":
+                fn = _stitch_experts_pop2 if carried else _stitch_experts_pop
+                leaf = fn(leaf, e["snaps"], lvl_idx, e["layer_idx"],
+                          e["expert_idx"])
+            else:
+                fn = _stitch_layers_pop2 if carried else _stitch_layers_pop
+                leaf = fn(leaf, e["snaps"], lvl_idx, e["layer_idx"])
+            layers[grp][leaf_key] = leaf
+            pop_leaves.add((grp, leaf_key))
         return new
 
 

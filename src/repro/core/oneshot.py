@@ -3,6 +3,12 @@ Hessians → database → structured-SPDY per speedup target → stitched models
 
 A single run produces the whole family of compressed models, one per
 speedup target, each with a runtime guarantee in the given environment.
+The family is searched in ONE population-batched pass (`spdy.search_family`):
+each target runs a population-vectorized DP per round, every unique
+candidate assignment is stitched and scored once for the whole family
+(`SnapshotCache.
+apply_batched` + a vmapped calibration loss, one host sync per round), and
+per-target RNG streams are fold-in derived from ``seed``.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ from .database import (ModuleDB, SnapshotCache, apply_assignment,
                        build_database)
 from .hessian import collect_hessians
 from .latency import LatencyTable, build_table
-from .spdy import SearchResult, search
+from .spdy import SearchResult, search_family
 from .structures import registry
 
 
@@ -43,20 +49,95 @@ class OneShotResult:
     dense_loss: float
 
 
-def calib_loss_fn(cfg, batches):
-    @jax.jit
-    def _loss(params):
-        losses = [loss_fn(cfg, params, b)["loss"] for b in batches]
-        return jnp.mean(jnp.stack(losses))
+def _stack_batch_groups(batches):
+    """Group same-structure batches and stack each group to (B, ...).
 
-    return lambda params: float(_loss(params))
+    Lets the calibration loss ``lax.map`` over the batch axis instead of
+    unrolling a Python list inside one jit — trace size no longer
+    multiplies with the eval-batch count.  Ragged batch sets degrade to
+    one group per distinct shape.
+    """
+    def dt(x):
+        return (x.dtype if hasattr(x, "dtype") else np.asarray(x).dtype)
+
+    groups: Dict[tuple, List[dict]] = {}
+    for b in batches:
+        key = tuple((k, tuple(np.shape(b[k])), np.dtype(dt(b[k])).name)
+                    for k in sorted(b))
+        groups.setdefault(key, []).append(b)
+    return [jax.tree.map(lambda *xs: jnp.stack(xs), *g)
+            for g in groups.values()]
+
+
+def _grouped_mean_loss(cfg, stacked, params):
+    """Mean per-batch loss over stacked batch groups — the one loss body
+    shared by the serial and population-vmapped calibration scorers."""
+    parts = [jax.lax.map(lambda b: loss_fn(cfg, params, b)["loss"], g)
+             for g in stacked]
+    return jnp.mean(jnp.concatenate([p.reshape(-1) for p in parts]))
+
+
+def calib_loss_fn(cfg, batches):
+    stacked = _stack_batch_groups(batches)
+    _loss = jax.jit(lambda params: _grouped_mean_loss(cfg, stacked, params))
+    fn = lambda params: float(_loss(params))
+    fn._jitted = _loss  # exposed for trace-size regression tests
+    return fn
+
+
+def batched_calib_loss_fn(cfg, batches, axes):
+    """Vmapped calibration loss over a population-stacked param tree.
+
+    ``axes`` is the `SnapshotCache.batch_axes` tree (0 on stitched leaves,
+    None elsewhere).  Returns a jitted fn: params_batched -> (P,) losses,
+    device-resident until the caller syncs.
+    """
+    stacked = _stack_batch_groups(batches)
+    return jax.jit(jax.vmap(
+        lambda params: _grouped_mean_loss(cfg, stacked, params),
+        in_axes=(axes,)))
+
+
+def make_batched_eval(cfg, params, cache: SnapshotCache, batches,
+                      chunk: int = 32, loss_b=None
+                      ) -> Callable[[List[Dict[str, int]]], np.ndarray]:
+    """Population scorer for `spdy.search_family`: stitch P assignments
+    device-side (`apply_batched`) and score them with one vmapped loss —
+    a single host sync per search round.
+
+    Work is chunked at ``chunk`` candidates (bounding device memory for
+    big populations) and padded to power-of-two sizes within a chunk, so
+    the vmapped jit compiles a handful of shapes instead of one per dedup
+    count.  Pass ``loss_b`` (a `batched_calib_loss_fn` result) to reuse
+    one compiled loss across scorers whose cfg/batches/axes agree — e.g.
+    `gradual_prune` rebuilding the cache per target.
+    """
+    if loss_b is None:
+        loss_b = batched_calib_loss_fn(cfg, batches,
+                                       cache.batch_axes(params))
+
+    def eval_batched(assignments: List[Dict[str, int]]) -> np.ndarray:
+        n = len(assignments)
+        out = np.empty((n,), np.float64)
+        for lo in range(0, n, chunk):
+            part = assignments[lo:lo + chunk]
+            k = len(part)
+            padded = min(1 << (k - 1).bit_length(), chunk)
+            part = part + [part[0]] * (padded - k)
+            pb = cache.apply_batched(params, part)
+            out[lo:lo + k] = np.asarray(loss_b(pb), np.float64)[:k]
+        return out
+
+    return eval_batched
 
 
 def oneshot_prune(cfg, params, calib_batches: List[dict],
                   env: InferenceEnv, targets: Sequence[float], *,
                   latency_backend: str = "costmodel",
                   latency_kw: Optional[dict] = None,
-                  search_steps: int = 200, eval_with_loss: bool = True,
+                  search_steps: int = 200, search_pop: int = 16,
+                  search_batched: bool = True,
+                  eval_with_loss: bool = True,
                   eval_batches: Optional[List[dict]] = None,
                   damp: float = 1e-4, use_kernel: bool = False,
                   mesh=None, data_axes=None,
@@ -67,7 +148,10 @@ def oneshot_prune(cfg, params, calib_batches: List[dict],
     from the installed activation context); ``latency_kw`` is forwarded to
     ``build_table`` — e.g. ``{"cache_dir": ...}`` so a measured table is
     loaded from / persisted to the latency cache instead of re-timed.
+    ``search_pop`` sets the SPDY population per round; ``search_batched=
+    False`` keeps the serial equivalence-reference search path.
     """
+    targets = list(targets)  # consumed twice: family search + variants
     hessians = collect_hessians(cfg, params, calib_batches,
                                 use_kernel=use_kernel, mesh=mesh,
                                 data_axes=data_axes)
@@ -83,16 +167,25 @@ def oneshot_prune(cfg, params, calib_batches: List[dict],
     loss_eval = calib_loss_fn(cfg, eval_batches or calib_batches[:1])
     dense_loss = loss_eval(params)
 
-    eval_fn = None
+    eval_fn = eval_batched = None
     if eval_with_loss:
         def eval_fn(assignment):
             return loss_eval(apply_assignment(cfg, params, db, assignment,
                                               cache=cache))
+        eval_batched = make_batched_eval(cfg, params, cache,
+                                         eval_batches or calib_batches[:1])
+
+    # one search pass for the whole family: shared candidate pool, shared
+    # stitch/eval memo, per-target budgets in the batched DP, per-target
+    # fold-in RNG streams
+    results = search_family(db, table, targets, steps=search_steps,
+                            pop=search_pop, eval_fn=eval_fn,
+                            eval_batched=eval_batched, seed=seed,
+                            batched=search_batched, verbose=verbose)
 
     variants: Dict[float, PrunedVariant] = {}
     for t in targets:
-        res = search(db, table, t, steps=search_steps, eval_fn=eval_fn,
-                     seed=seed, verbose=verbose)
+        res = results[t]
         pruned = apply_assignment(cfg, params, db, res.assignment,
                                   cache=cache)
         variants[t] = PrunedVariant(

@@ -19,7 +19,7 @@ from ..train.trainer import Trainer
 from .database import SnapshotCache, apply_assignment, build_database
 from .hessian import collect_hessians
 from .latency import build_table
-from .oneshot import calib_loss_fn
+from .oneshot import batched_calib_loss_fn, calib_loss_fn, make_batched_eval
 from .shrink import shrink
 from .spdy import search
 from .structures import get_matrix, registry
@@ -67,14 +67,22 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                   data: Iterator[Dict], calib_batches: List[Dict], *,
                   tcfg: Optional[TrainConfig] = None,
                   finetune_steps: int = 50, search_steps: int = 50,
+                  search_pop: int = 16, search_batched: bool = True,
                   latency_backend: str = "costmodel",
                   latency_kw: Optional[Dict] = None,
                   mesh=None, data_axes=None, ckpt_dir: str = None,
+                  seed: int = 0,
                   verbose: bool = False) -> List[GradualVariant]:
     """Gradual family pruning. ``latency_kw`` (e.g. ``{"cache_dir": ...}``)
     routes the measured-latency backend through the persistent cache —
     the table is measured once for the whole family; ``mesh``/``data_axes``
-    shard the per-target re-calibration over the mesh's data axes."""
+    shard the per-target re-calibration over the mesh's data axes.
+
+    Each target's SPDY search runs through the population-batched engine
+    (``search_pop`` candidates stitched+scored per device round); the
+    family cannot share one search pass here because every target
+    re-calibrates on the just-finetuned model, but per-target RNG streams
+    are still fold-in derived from ``seed``."""
     tcfg = tcfg or TrainConfig(learning_rate=8e-5, warmup_steps=5,
                                total_steps=finetune_steps,
                                distill_logit=1.0, distill_token=0.5)
@@ -85,15 +93,24 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
 
     current = params
     out: List[GradualVariant] = []
+    seeds = np.random.SeedSequence(seed).spawn(len(targets))
+    loss_b = None  # one compiled batched loss for the whole family
     for i, target in enumerate(sorted(targets)):
         # re-calibrate on the *current* model (Hessians drift as we prune)
         hessians = collect_hessians(cfg, current, calib_batches,
                                     mesh=mesh, data_axes=data_axes)
         db = build_database(cfg, current, hessians)
         cache = SnapshotCache(cfg, db)
+        if loss_b is None:
+            loss_b = batched_calib_loss_fn(cfg, calib_batches[:1],
+                                           cache.batch_axes(current))
         res = search(db, table, target, steps=search_steps,
+                     pop=search_pop, batched=search_batched, seed=seeds[i],
                      eval_fn=lambda a: loss_eval(
-                         apply_assignment(cfg, current, db, a, cache=cache)))
+                         apply_assignment(cfg, current, db, a, cache=cache)),
+                     eval_batched=make_batched_eval(cfg, current, cache,
+                                                    calib_batches[:1],
+                                                    loss_b=loss_b))
         masked = apply_assignment(cfg, current, db, res.assignment,
                                   cache=cache)
         loss_before = loss_eval(masked)

@@ -1,4 +1,4 @@
-"""Structured SPDY search (paper §3.2).
+"""Structured SPDY search (paper §3.2) — population-batched engine.
 
 Finds the per-module sparsity-level assignment that meets a runtime budget
 while minimizing (sensitivity-weighted) layer-wise error. Differences from
@@ -6,20 +6,45 @@ unstructured SPDY, exactly per the paper:
 
 * prior p_s = relative layer-wise error ||W_s X - W X|| / ||W X|| (value 1
   for a fully dropped module) instead of the quadratic sparsity prior;
-* fixed 1000 mutation steps, each mutating ~10% of the per-module
+* fixed mutation budget, each step mutating ~10% of the per-module
   sensitivity coefficients, instead of shrinking-neighborhood search;
 * every DP candidate *achieves the runtime budget by construction*
   (times are ceil-quantized into bins), giving the speedup guarantee.
+
+Execution model (this engine): the search runs in *rounds* of ``pop``
+candidates.  All candidates of a round are mutated from the round-start
+coefficients, solved with one vectorized DP pass (`dp_select_batched` —
+coefficients only rescale per-module costs, so the whole population shares
+the quantized-time structure), deduplicated against a score memo keyed by
+the DP's choices-tuple, and the surviving unique assignments are scored in
+a single batched stitched-model evaluation (``eval_batched``, one host
+sync per round).  ``batched=False`` runs the *same* round/mutation/
+acceptance schedule with the scalar `dp_select` and per-candidate
+``eval_fn`` — the equivalence reference: same seed ⇒ identical candidates,
+and (for the analytic score) bit-identical best assignment/score.
+
+`search_family` amortizes one search pass over a whole speedup-target
+family: each round, every target runs its own population-vectorized DP
+pass (one (P, nbins) slab per target — times quantized once per (budget,
+nbins); budgets can't share a slab because the bin quantization differs),
+every unique assignment is stitched and scored once for the *shared*
+candidate pool, and any scored candidate
+whose true table runtime meets another target's budget can be harvested as
+that target's best — the family reuses every stitch/eval.  Per-target RNG
+streams are fold-in derived (`SeedSequence(seed).spawn`), so targets no
+longer replay one another's mutation sequence.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from .database import ModuleDB
 from .latency import LatencyTable
+
+SeedLike = Union[int, np.random.SeedSequence]
 
 
 @dataclass
@@ -30,18 +55,33 @@ class SearchResult:
     score: float
     coeffs: np.ndarray
     history: List[float] = field(default_factory=list)
+    n_evals: int = 0          # unique assignments actually scored (family-wide)
+
+
+def quantize_times(times: List[np.ndarray], budget: float,
+                   nbins: int = 1024) -> List[np.ndarray]:
+    """Ceil-quantize per-module level times into ``nbins`` budget bins.
+
+    Done once per (budget, nbins): the mutation population only rescales
+    costs, never times, so every DP call for a target shares this.
+    """
+    scale = budget / nbins if budget > 0 else 1.0
+    return [np.minimum(np.ceil(t / scale).astype(np.int64), nbins + 1)
+            for t in times]
 
 
 def dp_select(costs: List[np.ndarray], times: List[np.ndarray],
-              budget: float, nbins: int = 1024):
+              budget: float, nbins: int = 1024,
+              tq: Optional[List[np.ndarray]] = None):
     """Pick one level per module minimizing sum(cost) s.t. sum(time)<=budget.
 
-    Returns (choices, total_cost) or (None, inf) if infeasible.
+    Returns (choices, total_cost) or (None, inf) if infeasible.  Scalar
+    reference for `dp_select_batched`; pass pre-quantized ``tq`` to skip
+    re-quantizing per call.
     """
     m = len(costs)
-    scale = budget / nbins if budget > 0 else 1.0
-    tq = [np.minimum(np.ceil(t / scale).astype(np.int64), nbins + 1)
-          for t in times]
+    if tq is None:
+        tq = quantize_times(times, budget, nbins)
 
     INF = np.inf
     dp = np.full(nbins + 1, INF)
@@ -76,25 +116,134 @@ def dp_select(costs: List[np.ndarray], times: List[np.ndarray],
     return choices, float(dp[int(np.argmin(dp))])
 
 
-def search(db: Dict[str, ModuleDB], table: LatencyTable,
-           target_speedup: float, *, steps: int = 1000,
-           mutate_frac: float = 0.1, nbins: int = 1024,
-           eval_fn: Optional[Callable[[Dict[str, int]], float]] = None,
-           seed: int = 0, verbose: bool = False) -> SearchResult:
-    """Random-mutation search over sensitivity coefficients (paper §3.2)."""
-    rng = np.random.default_rng(seed)
+def dp_select_batched(costs: List[np.ndarray], times=None, budget=None,
+                      nbins: int = 1024, tq: Optional[List[np.ndarray]] = None):
+    """Vectorized `dp_select` over a ``(P,)`` candidate batch.
+
+    ``costs``: one ``(P, n_levels_i)`` array per module — the population's
+    coefficient-rescaled priors.  Times are shared by the whole batch:
+    pass pre-quantized ``tq`` (from `quantize_times`) or ``times``+
+    ``budget``.  Returns ``(choices, totals)`` with ``choices`` of shape
+    ``(P, m)`` (rows of -1 for infeasible candidates) and ``totals`` of
+    shape ``(P,)`` (inf where infeasible).  The DP transition runs on
+    ``(P, nbins+1)`` slabs — one pass for the whole mutation population
+    instead of P scalar DPs.
+    """
+    m = len(costs)
+    P = int(costs[0].shape[0])
+    if tq is None:
+        tq = quantize_times(times, budget, nbins)
+
+    INF = np.inf
+    dp = np.full((P, nbins + 1), INF)
+    dp[:, 0] = 0.0
+    choice = np.zeros((m, P, nbins + 1), np.int16)
+    for i in range(m):
+        best = np.full((P, nbins + 1), INF)
+        arg = np.zeros((P, nbins + 1), np.int16)
+        ci = costs[i]
+        for l in range(ci.shape[1]):
+            t = int(tq[i][l])
+            if t > nbins:
+                continue
+            # update only the reachable [t:] tail in place (copyto on
+            # views — no full-width temporaries or fancy indexing)
+            cand = (dp + ci[:, l:l + 1] if t == 0
+                    else dp[:, :-t] + ci[:, l:l + 1])
+            bs = best if t == 0 else best[:, t:]
+            upd = cand < bs
+            np.copyto(bs, cand, where=upd)
+            np.copyto(arg if t == 0 else arg[:, t:], np.int16(l),
+                      where=upd)
+        dp = best
+        choice[i] = arg
+    rows = np.arange(P)
+    b = np.argmin(dp, axis=1)
+    totals = dp[rows, b]
+    infeasible = ~np.isfinite(totals)
+    choices = np.full((P, m), -1, np.int64)
+    if infeasible.all():
+        return choices, totals
+    bb = b.astype(np.int64)
+    for i in range(m - 1, -1, -1):
+        l = choice[i, rows, bb].astype(np.int64)
+        choices[:, i] = l
+        # feasible rows stay in range by DP construction; clamp so rows
+        # being discarded as infeasible cannot index out of bounds
+        bb = np.clip(bb - tq[i][l], 0, nbins)
+    choices[infeasible] = -1
+    return choices, totals
+
+
+def _spawn_rngs(seed: SeedLike, n: int) -> List[np.random.Generator]:
+    """Fold-in derived, mutually independent per-target RNG streams."""
+    root = (seed if isinstance(seed, np.random.SeedSequence)
+            else np.random.SeedSequence(seed))
+    return [np.random.default_rng(c) for c in root.spawn(n)]
+
+
+def _mutate_population(rng: np.random.Generator, coeffs: np.ndarray,
+                       pop: int, mutate_frac: float,
+                       include_base: bool) -> np.ndarray:
+    """Draw a round's candidate coefficients — (pop, m), row 0 the
+    unmutated base when ``include_base`` (round 0).  Shared verbatim by the
+    serial and batched paths so the same seed yields the same candidates.
+    """
+    m = len(coeffs)
+    out = np.empty((pop, m))
+    for p in range(pop):
+        if include_base and p == 0:
+            out[p] = coeffs
+            continue
+        c = coeffs.copy()
+        mask = rng.random(m) < mutate_frac
+        if not mask.any():
+            mask[rng.integers(m)] = True
+        c[mask] *= np.exp(rng.normal(0, 0.6, mask.sum()))
+        out[p] = c
+    return out
+
+
+def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
+                  targets: Sequence[float], *, steps: int = 1000,
+                  pop: int = 16, mutate_frac: float = 0.1,
+                  nbins: int = 1024,
+                  eval_fn: Optional[Callable[[Dict[str, int]], float]] = None,
+                  eval_batched: Optional[
+                      Callable[[List[Dict[str, int]]], np.ndarray]] = None,
+                  seed: SeedLike = 0, batched: bool = True,
+                  share_pool: bool = True,
+                  verbose: bool = False) -> Dict[float, SearchResult]:
+    """One amortized SPDY search over a whole speedup-target family.
+
+    ``steps`` counts candidates *per target* (matching the old per-target
+    `search` semantics, so serial-vs-family comparisons are equal-steps).
+    ``eval_batched`` scores a list of assignments in one device call (see
+    ``oneshot.make_batched_eval``); without it the batched path falls back
+    to per-candidate ``eval_fn`` on the deduplicated pool.  With neither,
+    candidates get the paper's analytic sum-of-squared-priors score.
+    """
+    targets = list(targets)
+    K = len(targets)
+    if K == 0:
+        return {}
+    if pop <= 0:
+        raise ValueError(f"pop must be positive, got {pop}")
     names = list(db.keys())
-    mods = [db[n].mod for n in names]
+    m = len(names)
     priors = [db[n].priors.astype(np.float64) for n in names]
     times = [table.level_times(db[n].mod).astype(np.float64) for n in names]
-
     dense = table.base + sum(t[0] for t in times)
-    budget_total = dense / target_speedup
-    budget = budget_total - table.base
-    if budget <= 0:
-        raise ValueError(
-            f"target speedup {target_speedup}x below the unprunable base "
-            f"({table.base:.2e}s of {dense:.2e}s dense)")
+
+    budgets = []
+    for t in targets:
+        budget = dense / t - table.base
+        if budget <= 0:
+            raise ValueError(
+                f"target speedup {t}x below the unprunable base "
+                f"({table.base:.2e}s of {dense:.2e}s dense)")
+        budgets.append(budget)
+    tqs = [quantize_times(times, b, nbins) for b in budgets]
 
     def assemble(choices) -> Dict[str, int]:
         return {n: int(db[n].levels[c]) for n, c in zip(names, choices)}
@@ -102,36 +251,147 @@ def search(db: Dict[str, ModuleDB], table: LatencyTable,
     def runtime(choices) -> float:
         return table.base + sum(t[c] for t, c in zip(times, choices))
 
-    coeffs = np.ones(len(names))
-    best = None
-    history = []
-    for step in range(steps):
-        if step == 0:
-            cand_coeffs = coeffs
-        else:
-            cand_coeffs = coeffs.copy()
-            mask = rng.random(len(names)) < mutate_frac
-            if not mask.any():
-                mask[rng.integers(len(names))] = True
-            cand_coeffs[mask] *= np.exp(rng.normal(0, 0.6, mask.sum()))
-        costs = [c * p for c, p in zip(cand_coeffs, priors)]
-        choices, _ = dp_select(costs, times, budget, nbins)
-        if choices is None:
-            continue
-        assignment = assemble(choices)
-        score = (eval_fn(assignment) if eval_fn is not None
-                 else float(sum(p[c] ** 2 for p, c in zip(priors, choices))))
-        history.append(score)
-        if best is None or score < best.score:
-            rt = runtime(choices)
-            best = SearchResult(assignment=assignment, runtime=rt,
+    rngs = _spawn_rngs(seed, K)
+    coeffs = [np.ones(m) for _ in range(K)]
+    best: List[Optional[SearchResult]] = [None] * K
+    harvested: List[Optional[SearchResult]] = [None] * K
+    hist: List[List[float]] = [[] for _ in range(K)]
+    done = [0] * K
+    memo: Dict[tuple, float] = {}
+    producer: Dict[tuple, np.ndarray] = {}  # choices-tuple -> coeffs row
+    n_evals = 0
+    analytic = eval_fn is None and eval_batched is None
+
+    rnd = 0
+    while any(d < steps for d in done):
+        entries = []  # (k, C, choices) per target active this round
+        for k in range(K):
+            P_k = min(pop, steps - done[k])
+            if P_k <= 0:
+                continue
+            C = _mutate_population(rngs[k], coeffs[k], P_k, mutate_frac,
+                                   include_base=(rnd == 0))
+            done[k] += P_k
+            if batched:
+                costs = [C[:, [i]] * priors[i][None, :] for i in range(m)]
+                ch, _ = dp_select_batched(costs, tq=tqs[k], nbins=nbins)
+            else:
+                ch = np.full((P_k, m), -1, np.int64)
+                for p in range(P_k):
+                    cp = [C[p, i] * priors[i] for i in range(m)]
+                    c_p, _ = dp_select(cp, times, budgets[k], nbins,
+                                       tq=tqs[k])
+                    if c_p is not None:
+                        ch[p] = c_p
+            entries.append((k, C, ch))
+
+        # dedup this round's feasible candidates against the shared memo
+        new_keys: List[tuple] = []
+        for k, C, ch in entries:
+            for p in range(ch.shape[0]):
+                if ch[p, 0] < 0:
+                    continue
+                key = tuple(int(c) for c in ch[p])
+                if key not in memo and key not in producer:
+                    producer[key] = C[p].copy()
+                    new_keys.append(key)
+
+        if new_keys:
+            if analytic:
+                vals = [float(sum(p[c] ** 2 for p, c in zip(priors, key)))
+                        for key in new_keys]
+            elif batched and eval_batched is not None:
+                vals = np.asarray(
+                    eval_batched([assemble(key) for key in new_keys]),
+                    np.float64)
+            else:
+                fn = eval_fn if eval_fn is not None else \
+                    (lambda a: float(eval_batched([a])[0]))
+                vals = [float(fn(assemble(key))) for key in new_keys]
+            for key, v in zip(new_keys, vals):
+                memo[key] = float(v)
+            n_evals += len(new_keys)
+
+        def result_for(key, score, cand_coeffs):
+            rt = runtime(key)
+            return SearchResult(assignment=assemble(key), runtime=rt,
                                 speedup=dense / rt, score=score,
-                                coeffs=cand_coeffs.copy())
-            coeffs = cand_coeffs
-            if verbose:
-                print(f"  spdy step {step}: score={score:.5f} "
-                      f"speedup={best.speedup:.2f}x")
-    if best is None:
-        raise RuntimeError("SPDY found no feasible assignment")
-    best.history = history
-    return best
+                                coeffs=np.asarray(cand_coeffs).copy())
+
+        # own-candidate acceptance drives the mutation trajectory: coeffs
+        # only ever follow a target's OWN stream, so each target's
+        # candidate sequence is identical to its single-target run
+        for k, C, ch in entries:
+            for p in range(ch.shape[0]):
+                if ch[p, 0] < 0:
+                    continue
+                key = tuple(int(c) for c in ch[p])
+                score = memo[key]
+                hist[k].append(score)
+                if best[k] is None or score < best[k].score:
+                    best[k] = result_for(key, score, C[p])
+                    coeffs[k] = np.asarray(C[p]).copy()
+                    if verbose:
+                        print(f"  spdy[{targets[k]}x] round {rnd}: "
+                              f"score={score:.5f} "
+                              f"speedup={best[k].speedup:.2f}x")
+
+        # cross-target harvest: any assignment scored this round whose true
+        # table runtime meets another target's budget is a free candidate
+        # for that target — the family shares every stitch/eval.  Kept
+        # separate from ``best``/``coeffs`` so a foreign candidate can
+        # only improve the returned result, never redirect the stream.
+        if share_pool and K > 1:
+            for key in new_keys:
+                score = memo[key]
+                rt = runtime(key)
+                for k in range(K):
+                    cur = min((r.score for r in (best[k], harvested[k])
+                               if r is not None), default=None)
+                    if cur is not None and score >= cur:
+                        continue
+                    # exact budget check: a harvested result must honor the
+                    # adopting target's hard speedup guarantee
+                    if rt <= dense / targets[k]:
+                        harvested[k] = result_for(key, score,
+                                                  producer[key])
+                        if verbose:
+                            print(f"  spdy[{targets[k]}x] round {rnd}: "
+                                  f"harvested score={score:.5f}")
+        # producer rows are only read within the round (dedup falls to the
+        # memo once a key is scored) — don't hold coeffs copies for the
+        # whole search
+        producer.clear()
+        rnd += 1
+
+    out: Dict[float, SearchResult] = {}
+    for k, t in enumerate(targets):
+        res = best[k]
+        if harvested[k] is not None and (res is None
+                                         or harvested[k].score < res.score):
+            res = harvested[k]
+        if res is None:
+            raise RuntimeError(
+                f"SPDY found no feasible assignment for target {t}x")
+        res.history = hist[k]
+        res.n_evals = n_evals
+        out[t] = res
+    return out
+
+
+def search(db: Dict[str, ModuleDB], table: LatencyTable,
+           target_speedup: float, *, steps: int = 1000, pop: int = 16,
+           mutate_frac: float = 0.1, nbins: int = 1024,
+           eval_fn: Optional[Callable[[Dict[str, int]], float]] = None,
+           eval_batched: Optional[
+               Callable[[List[Dict[str, int]]], np.ndarray]] = None,
+           seed: SeedLike = 0, batched: bool = True,
+           verbose: bool = False) -> SearchResult:
+    """Single-target random-mutation search (paper §3.2) — a one-target
+    `search_family`.  ``batched=False`` is the serial equivalence
+    reference (same rounds/mutations, scalar DP, per-candidate eval)."""
+    return search_family(
+        db, table, [target_speedup], steps=steps, pop=pop,
+        mutate_frac=mutate_frac, nbins=nbins, eval_fn=eval_fn,
+        eval_batched=eval_batched, seed=seed, batched=batched,
+        verbose=verbose)[target_speedup]

@@ -49,10 +49,11 @@ def test_matmul_time_tiling_penalty():
 
 def test_spdy_meets_budget_and_beats_uniform(trained_tiny, tiny_cfg,
                                              tiny_calib):
-    from repro.core.database import apply_assignment, build_database
+    from repro.core.database import (SnapshotCache, apply_assignment,
+                                     build_database)
     from repro.core.hessian import collect_hessians
     from repro.core.magnitude import uniform_assignment
-    from repro.core.oneshot import calib_loss_fn
+    from repro.core.oneshot import calib_loss_fn, make_batched_eval
     from repro.core.spdy import search
 
     params, _ = trained_tiny
@@ -60,10 +61,13 @@ def test_spdy_meets_budget_and_beats_uniform(trained_tiny, tiny_cfg,
     tab = build_table(tiny_cfg, env, backend="costmodel")
     hess = collect_hessians(tiny_cfg, params, tiny_calib)
     db = build_database(tiny_cfg, params, hess)
+    cache = SnapshotCache(tiny_cfg, db)
     loss = calib_loss_fn(tiny_cfg, tiny_calib[:1])
     res = search(db, tab, 2.0, steps=40,
                  eval_fn=lambda a: loss(
-                     apply_assignment(tiny_cfg, params, db, a)))
+                     apply_assignment(tiny_cfg, params, db, a)),
+                 eval_batched=make_batched_eval(tiny_cfg, params, cache,
+                                                tiny_calib[:1]))
     # guarantee: achieved >= target
     assert res.speedup >= 2.0 - 1e-6
     # SPDY (non-uniform) no worse than the uniform heuristic
