@@ -255,6 +255,7 @@ def bench_fig5_scaling_law():
 
 
 def bench_fig2_gradual():
+    import tempfile
     params, _ = trained_model()
     calib = _STATE["calib"]
     data = synthetic_stream(TINY, 16, 64, seed=21)
@@ -263,7 +264,8 @@ def bench_fig2_gradual():
     t0 = time.perf_counter()
     variants = gradual_prune(TINY, params, ENV, [1.5, 2.0], data, calib,
                              tcfg=tcfg, finetune_steps=15, search_steps=10,
-                             ckpt_dir="/tmp/bench_gradual")
+                             ckpt_dir=tempfile.mkdtemp(prefix="bench_grad"),
+                             resume=False)
     us = (time.perf_counter() - t0) * 1e6
     detail = " | ".join(
         f"{v.target}x loss {v.loss_before_ft:.4f}->{v.loss_after_ft:.4f} "
@@ -820,6 +822,133 @@ def bench_latency_cache():
         f"speedup={rec['speedup']:.0f}x reps_on_hit={reps_on_hit}")
 
 
+# forced 2-device mesh-sharded vs single-device trainer step throughput
+# (the distillation-finetune hot path of the family engine)
+_SHARD_STEP_SCRIPT = r"""
+import json, tempfile, time
+import jax
+from repro.configs import GPT2_SMALL
+from repro.configs.base import TrainConfig
+from repro.data import synthetic_stream
+from repro.distributed.sharding import make_mesh, mesh_config_for
+from repro.models import model_init
+from repro.train.trainer import Trainer
+
+N = __STEPS__
+# NOTE: on this 2-core container single-device XLA already saturates both
+# cores via intra-op threading, so the forced 2-device split can only
+# break even at best here (~0.9x measured); the number tracks the mesh
+# path's overhead — the speedup needs devices that add hardware
+CFG = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=4, d_model=96, d_ff=384, num_heads=6,
+    num_kv_heads=6, head_dim=16, vocab_size=384, dtype="float32")
+params, specs = model_init(CFG, jax.random.key(0))
+teacher, _ = model_init(CFG, jax.random.key(1))
+mesh = make_mesh((2,), ("data",))
+mc = mesh_config_for(mesh)
+
+def steps_per_s(use_mesh):
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=N + 2,
+                       warmup_steps=2, distill_logit=1.0, distill_token=0.5)
+    tr = Trainer(CFG, tcfg, ckpt_dir=tempfile.mkdtemp(), ckpt_every=10**6,
+                 teacher_params=teacher,
+                 mesh=mesh if use_mesh else None,
+                 mc=mc if use_mesh else None,
+                 specs=specs if use_mesh else None)
+    st = tr.init_or_restore(params)
+    data = synthetic_stream(CFG, 16, 64, seed=1)
+    st = tr.fit(st, data, steps=2)                 # warm (compile)
+    t0 = time.perf_counter()
+    tr.fit(st, data, steps=N + 2)
+    return N / (time.perf_counter() - t0)
+
+single = steps_per_s(False)
+shard = steps_per_s(True)
+print("RESULT" + json.dumps({
+    "devices": jax.device_count(), "steps": N,
+    "single_steps_per_s": single, "sharded_steps_per_s": shard,
+    "speedup": shard / single}))
+"""
+
+
+def bench_gradual_family():
+    """Stage-checkpointed family engine: end-to-end family wall-time,
+    resume overhead after a mid-target kill (only the in-flight stage
+    re-executes; results stay bit-identical), and mesh-sharded vs
+    single-device distillation-step throughput on a forced 2-device CPU
+    mesh. ``--smoke`` shrinks every knob to a CI-sized end-to-end pass."""
+    import tempfile
+
+    from repro.core.pipeline import FamilyPreempted
+    from repro.launch.subproc import run_forced_devices
+
+    if _SMOKE:
+        params, _ = model_init(TINY, jax.random.key(0))
+        ft, search, pop, kill, every, shard_steps = 6, 3, 4, 4, 2, 6
+    else:
+        params, _ = trained_model()
+        ft, search, pop, kill, every, shard_steps = 15, 10, 8, 10, 5, 24
+    calib = calibration_batches(TINY, 16, 64, batch=8)
+    targets = [1.5, 2.0]
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2, total_steps=ft,
+                       distill_logit=1.0, distill_token=0.5)
+    data = lambda step: synthetic_stream(TINY, 16, 64, seed=21,
+                                         start_step=step)
+    kw = dict(tcfg=tcfg, finetune_steps=ft, search_steps=search,
+              search_pop=pop, ckpt_every=every, seed=0)
+
+    def run(base, **extra):
+        t0 = time.perf_counter()
+        try:
+            v = gradual_prune(TINY, params, ENV, targets, data, calib,
+                              ckpt_dir=base, **kw, **extra)
+        except FamilyPreempted:
+            v = None
+        return time.perf_counter() - t0, v
+
+    # warm every jit path with a throwaway family first: the timed runs
+    # must compare warm-vs-warm or the compile cost of whichever run goes
+    # first drowns the resume overhead being measured
+    run(tempfile.mkdtemp(prefix="bench_family_warm"))
+    t_full, v_full = run(tempfile.mkdtemp(prefix="bench_family_full"))
+    base_kill = tempfile.mkdtemp(prefix="bench_family_kill")
+    t_kill, _ = run(base_kill, stop_after=(1, "finetune", kill))
+    t_resume, v_res = run(base_kill)
+
+    assignments_equal = all(a.assignment == b.assignment
+                            for a, b in zip(v_full, v_res))
+    params_equal = all(
+        bool(np.all(np.asarray(x) == np.asarray(y)))
+        for x, y in zip(jax.tree.leaves(v_full[-1].params),
+                        jax.tree.leaves(v_res[-1].params)))
+    overhead = t_kill + t_resume - t_full
+
+    try:
+        shard = run_forced_devices(
+            _SHARD_STEP_SCRIPT.replace("__STEPS__", str(shard_steps)), 2)
+    except RuntimeError as e:
+        shard = {"error": str(e)[-200:]}
+
+    rec = {"config": TINY.name, "targets": targets, "finetune_steps": ft,
+           "search_steps": search, "smoke": _SMOKE,
+           "family_wall_s": t_full, "killed_run_s": t_kill,
+           "resume_s": t_resume, "resume_overhead_s": overhead,
+           "resume_overhead_frac": overhead / max(t_full, 1e-12),
+           "assignments_equal": assignments_equal,
+           "params_bit_identical": params_equal,
+           "sharded_step_throughput": shard}
+    # the CI smoke pass must not clobber the measured numbers the docs cite
+    _write_bench_db(
+        {("gradual_family_smoke" if _SMOKE else "gradual_family"): rec})
+    sp = shard.get("speedup")
+    shard_txt = f"shard_speedup={sp:.2f}x" if sp is not None \
+        else "shard FAILED"
+    row("gradual_family", t_full * 1e6,
+        f"full={t_full:.1f}s kill+resume={t_kill:.1f}+{t_resume:.1f}s "
+        f"overhead={overhead:.1f}s equal={assignments_equal}/"
+        f"{params_equal} {shard_txt}")
+
+
 def bench_roofline():
     files = sorted(glob.glob(os.path.join(
         os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
@@ -849,6 +978,7 @@ BENCHES = {
     "table8": bench_table8_speedup_guarantee,
     "fig5": bench_fig5_scaling_law,
     "fig2": bench_fig2_gradual,
+    "gradual_family": bench_gradual_family,
     "kernels": bench_kernels,
     "db_build": bench_db_build,
     "db_build_compact": bench_db_build_compact,
@@ -862,15 +992,24 @@ BENCHES = {
 # benches that run on synthetic weights/hessians; no tiny-GPT2 training
 _NO_TRAIN = {"table7", "table3", "kernels", "db_build", "db_build_compact",
              "spdy_eval", "spdy_search", "calib_shard", "latency_cache",
-             "roofline"}
+             "roofline", "gradual_family"}
+
+# --smoke: shrink bench shapes/steps for the CI end-to-end pass
+# (currently honored by gradual_family; harmless elsewhere)
+_SMOKE = False
 
 
 def main(argv=None) -> None:
+    global _SMOKE
     args = list(argv if argv is not None else sys.argv[1:])
+    if "--smoke" in args:
+        _SMOKE = True
+        args = [a for a in args if a != "--smoke"]
     flags = [a for a in args if a.startswith("-")]
     if flags:
         raise SystemExit(f"unrecognized option(s) {flags}; "
-                         f"usage: run.py [{' | '.join(sorted(BENCHES))}]")
+                         f"usage: run.py [--smoke] "
+                         f"[{' | '.join(sorted(BENCHES))}]")
     names = args
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -64,9 +64,14 @@ def main():
     ft_cfg = TrainConfig(learning_rate=5e-4, warmup_steps=2,
                          total_steps=ft_steps, distill_logit=1.0,
                          distill_token=0.5)
+    # a step-indexed data factory (not a bare iterator) makes the family
+    # run resumable bit-exactly: re-running this script after a kill picks
+    # up at the interrupted (target, stage) instead of starting over
+    data = lambda step: synthetic_stream(cfg, batch, seq, seed=99,
+                                         start_step=step)
     variants = gradual_prune(cfg, state.params, env, [1.5, 2.0, 3.0],
-                             synthetic_stream(cfg, batch, seq, seed=99),
-                             calib, tcfg=ft_cfg, finetune_steps=ft_steps,
+                             data, calib, tcfg=ft_cfg,
+                             finetune_steps=ft_steps,
                              search_steps=25, search_pop=16, seed=0,
                              ckpt_dir=args.ckpt, verbose=True)
     print("\nfamily:")

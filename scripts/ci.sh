@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# One-command CI: tier-1 (fast, default pytest run), tier-2 (subprocess /
+# forced-multi-device mesh tests), and an end-to-end smoke pass of the
+# stage-checkpointed family engine (kill -> resume -> bit-identity checked
+# inside the bench, recorded in BENCH_db.json).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 =="
+python -m pytest -x -q
+
+echo "== tier-2 (forced-multi-device subprocess tests) =="
+python -m pytest -m tier2 -q
+
+echo "== gradual_family smoke bench =="
+python benchmarks/run.py gradual_family --smoke

@@ -58,20 +58,26 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save_pytree(tree, path: str) -> str:
-    """Atomic synchronous save. Returns the manifest hash."""
-    flat = _flatten(tree)
-    tmp = path + ".tmp"
+def atomic_save_npz(path: str, arrays: Dict[str, np.ndarray]) -> str:
+    """Atomic ``np.savez`` via pid-unique tmp + ``os.replace`` (same
+    contract as :func:`atomic_write_json`); returns the file's sha256.
+    Shared by trainer checkpoints and the family-run stage artifacts."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(tmp, **flat)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    np.savez(tmp, **arrays)
     if not os.path.exists(tmp) and os.path.exists(tmp + ".npz"):
-        os.replace(tmp + ".npz", tmp)
+        os.replace(tmp + ".npz", tmp)  # np.savez may append .npz
     h = hashlib.sha256()
     with open(tmp, "rb") as f:
         for chunk in iter(lambda: f.read(1 << 20), b""):
             h.update(chunk)
     os.replace(tmp, path)
     return h.hexdigest()
+
+
+def save_pytree(tree, path: str) -> str:
+    """Atomic synchronous save. Returns the manifest hash."""
+    return atomic_save_npz(path, _flatten(tree))
 
 
 def restore_pytree(template, path: str, shardings=None):
@@ -138,21 +144,13 @@ class CheckpointManager:
 
     def _write(self, step: int, host: Dict[str, np.ndarray]):
         path = self._ckpt_path(step)
-        tmp = path + ".tmp"
-        np.savez(tmp, **host)
-        if not os.path.exists(tmp) and os.path.exists(tmp + ".npz"):
-            os.replace(tmp + ".npz", tmp)
-        h = hashlib.sha256()
-        with open(tmp, "rb") as f:
-            for chunk in iter(lambda: f.read(1 << 20), b""):
-                h.update(chunk)
-        os.replace(tmp, path)
+        digest = atomic_save_npz(path, host)
         manifest = self._read_manifest()
         manifest["checkpoints"] = [c for c in manifest.get("checkpoints", [])
                                    if c["step"] != step]
         manifest["checkpoints"].append(
             {"step": step, "file": os.path.basename(path),
-             "sha256": h.hexdigest(), "time": time.time()})
+             "sha256": digest, "time": time.time()})
         manifest["checkpoints"].sort(key=lambda c: c["step"])
         # retention
         while len(manifest["checkpoints"]) > self.keep:

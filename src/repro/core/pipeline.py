@@ -1,28 +1,88 @@
-"""Gradual structured pruning (paper §4.1): for each speedup target in
-ascending order, ZipLM-prune the *current* model to the target, then
-finetune with layer-wise token distillation against the dense teacher,
-and export. One run, one set of hyper-parameters, a whole model family —
-each member meeting its runtime target by construction.
+"""Gradual structured pruning (paper §4.1) as a stage-checkpointed,
+mesh-shardable *family engine*: for each speedup target in ascending
+order, ZipLM-prune the *current* model to the target, then finetune with
+layer-wise token distillation against the dense teacher, and export. One
+run, one set of hyper-parameters, a whole model family — each member
+meeting its runtime target by construction.
+
+Fault tolerance / resume semantics
+----------------------------------
+A family run owns a unique run directory (derived from (cfg name,
+targets, seed) unless ``ckpt_dir`` pins the base — and even then the run
+nests under a ``<cfg>-<run_key>`` subdirectory, so two concurrent runs
+with different seeds can never cross-restore each other's trainer
+checkpoints or manifests). Inside it a ``family.json`` manifest — written
+atomically via :func:`checkpoint.manager.atomic_write_json` — records
+per-target stage progress through the pipeline
+
+    hessians -> db -> search -> finetune -> done
+
+and each completed stage persists its artifact next to the trainer
+checkpoints (``t<target>/hessians.npz``, ``t<target>/db.npz``, the SPDY
+result inline in the manifest, ``t<target>/ckpt/`` for finetune steps,
+``t<target>/params.npz`` with the finished target's final params). A
+preempted run re-invoked with the same arguments resumes at the exact
+(target, stage): completed targets are reconstructed from their artifacts
+(no Hessian collection, database build, or search is redone), the
+in-flight target reloads every completed stage's artifact and re-executes
+only the in-flight stage, and an in-flight finetune resumes from the
+trainer's latest checkpoint. With a deterministic data source (pass
+``data`` as a callable ``global_step -> iterator``, e.g. a
+``synthetic_stream`` factory) a killed-and-resumed family run is
+bit-identical to an uninterrupted one.
+
+Manifest format (``family.json``)::
+
+    {"version": 1,
+     "header": {"cfg": ..., "targets": [...], "seed": ...,
+                "finetune_steps": ..., "search_steps": ...,
+                "search_pop": ..., "run_key": ...},
+     "runs": <attempt counter>,
+     "targets": {"<target>": {"stage": "pending|hessians|db|search|done",
+                              "assignment": {...}, "runtime": ...,
+                              "speedup": ..., "score": ..., "coeffs": [...],
+                              "n_evals": ..., "loss_before_ft": ...,
+                              "loss_after_ft": ...}},
+     "executed": [{"run": n, "target": "<t>", "stage": "<s>"}, ...]}
+
+``executed`` is append-only stage bookkeeping: every stage that actually
+*computes* (vs. loads its artifact) logs one event tagged with the
+attempt counter, so tests can assert a resume re-executed only the
+in-flight stage. A header mismatch (same directory, different family
+parameters) raises instead of silently mixing state.
+
+``stop_after=(target_idx, stage)`` simulates preemption right after that
+stage's artifact is durably persisted; ``(target_idx, "finetune", step)``
+kills mid-finetune after ``step`` trainer steps (the trainer's own
+``stop_after``), leaving whatever checkpoints ``ckpt_every`` produced.
+Both raise :class:`FamilyPreempted`.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
+import tempfile
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import TrainConfig
+from ..checkpoint.manager import (atomic_save_npz, atomic_write_json,
+                                  load_json, restore_pytree, save_pytree)
+from ..configs.base import MeshConfig, TrainConfig
 from ..models.pruned import PrunedModel
 from ..train.trainer import Trainer
-from .database import SnapshotCache, apply_assignment, build_database
+from .database import (ModuleDB, SnapshotCache, apply_assignment,
+                       build_database)
 from .hessian import collect_hessians
 from .latency import build_table
 from .oneshot import batched_calib_loss_fn, calib_loss_fn, make_batched_eval
 from .shrink import shrink
-from .spdy import search
-from .structures import get_matrix, registry
+from .spdy import SearchResult, search
+from .structures import registry
 
 
 def masks_from_assignment(cfg, params, db, assignment):
@@ -63,66 +123,386 @@ class GradualVariant:
     loss_after_ft: float
 
 
+class FamilyPreempted(RuntimeError):
+    """Raised at a simulated (``stop_after``) preemption point after the
+    in-flight stage's state is durably checkpointed; re-invoking
+    ``gradual_prune`` with the same arguments resumes the run."""
+
+
+# ----------------------------------------------------------------------
+# run directory + manifest
+# ----------------------------------------------------------------------
+
+STAGES = ("hessians", "db", "search", "done")  # "done" == finetuned
+
+
+def family_run_key(cfg, targets: Sequence[float], seed: int) -> str:
+    """Content key identifying one family run's state: two runs share
+    checkpoints iff (cfg name, targets, seed) agree."""
+    doc = {"cfg": cfg.name, "targets": [float(t) for t in sorted(targets)],
+           "seed": int(seed)}
+    return hashlib.sha256(
+        json.dumps(doc, sort_keys=True).encode()).hexdigest()[:12]
+
+
+def family_run_dir(cfg, targets: Sequence[float], seed: int,
+                   base: Optional[str] = None) -> str:
+    """Unique per-run directory. ``base=None`` -> a tempdir-rooted default;
+    an explicit base still nests per run key, so concurrent families
+    sharing a base can never cross-restore."""
+    base = base or os.path.join(tempfile.gettempdir(), "ziplm_families")
+    return os.path.join(base, f"{cfg.name}-{family_run_key(cfg, targets, seed)}")
+
+
+def _tkey(target: float) -> str:
+    return f"{float(target):g}"
+
+
+def _tree_digest(tree, max_elems: int = 4096) -> str:
+    """Content fingerprint of an array pytree (params / calib batches):
+    resuming against different inputs must raise, not silently return the
+    previous inputs' family. Large leaves hash a deterministic strided
+    subsample (device-side gather, tiny host transfer) instead of pulling
+    multi-GB sharded params to the host just to build the header."""
+    h = hashlib.sha256()
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        shape = tuple(getattr(leaf, "shape", ()))
+        size = int(np.prod(shape)) if shape else 1
+        h.update(str(path).encode())
+        h.update(str((shape, str(getattr(leaf, "dtype", type(leaf))))
+                     ).encode())
+        if size <= max_elems:
+            h.update(np.asarray(leaf).tobytes())
+        else:
+            stride = -(-size // max_elems)
+            h.update(np.asarray(jnp.ravel(leaf)[::stride]).tobytes())
+    return h.hexdigest()[:16]
+
+
+class FamilyRunState:
+    """Atomic-JSON manifest of per-target stage progress (format above)."""
+
+    FILE = "family.json"
+
+    def __init__(self, run_dir: str, header: Dict):
+        self.path = os.path.join(run_dir, self.FILE)
+        doc = load_json(self.path)
+        if doc is not None and doc.get("header") != header:
+            raise ValueError(
+                f"family manifest at {self.path} belongs to a different "
+                f"run (header {doc.get('header')} != {header}); use a "
+                f"different ckpt_dir or matching arguments")
+        if doc is None:
+            doc = {"version": 1, "header": header, "runs": 0,
+                   "targets": {}, "executed": []}
+        doc["runs"] = int(doc.get("runs", 0)) + 1
+        self.doc = doc
+        self.run = doc["runs"]
+        self._save()
+
+    def _save(self):
+        atomic_write_json(self.path, self.doc)
+
+    def entry(self, tkey: str) -> Dict:
+        return self.doc["targets"].setdefault(tkey, {"stage": "pending"})
+
+    def stage_done(self, tkey: str, stage: str) -> bool:
+        cur = self.entry(tkey)["stage"]
+        if cur == "pending":
+            return False
+        return STAGES.index(cur) >= STAGES.index(stage)
+
+    def record(self, tkey: str, stage: str, executed: bool = True,
+               **payload):
+        """Mark ``stage`` complete for ``tkey``; ``executed`` logs a
+        stage-execution event (False when an artifact was merely loaded)."""
+        e = self.entry(tkey)
+        e["stage"] = stage
+        e.update(payload)
+        if executed:
+            self.doc["executed"].append(
+                {"run": self.run, "target": tkey, "stage": stage})
+        self._save()
+
+    def log_exec(self, tkey: str, stage: str):
+        """Log a stage execution without completing it (mid-stage work
+        such as an in-flight finetune)."""
+        self.doc["executed"].append(
+            {"run": self.run, "target": tkey, "stage": stage})
+        self._save()
+
+    def executed(self, run: Optional[int] = None) -> List[Dict]:
+        ev = self.doc["executed"]
+        return ev if run is None else [e for e in ev if e["run"] == run]
+
+
+# ----------------------------------------------------------------------
+# stage artifacts
+# ----------------------------------------------------------------------
+
+def _save_hessians(path: str, hessians: Dict[str, jnp.ndarray]):
+    atomic_save_npz(path, {k: np.asarray(v) for k, v in hessians.items()})
+
+
+def _load_hessians(path: str) -> Dict[str, jnp.ndarray]:
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+_DB_FIELDS = ("snapshots", "errors", "priors", "levels", "order")
+
+
+def _save_db(path: str, db: Dict[str, ModuleDB]):
+    arrs = {}
+    for name, mdb in db.items():
+        for f in _DB_FIELDS:
+            arrs[f"{name}::{f}"] = np.asarray(getattr(mdb, f))
+        arrs[f"{name}::base_norm"] = np.float64(mdb.base_norm)
+    atomic_save_npz(path, arrs)
+
+
+def _load_db(cfg, path: str) -> Dict[str, ModuleDB]:
+    data = np.load(path)
+    present = {k.split("::")[0] for k in data.files}
+    out = {}
+    # registry order, NOT sorted: SPDY's module ordering (and with it the
+    # per-module RNG stream alignment) follows db insertion order, and
+    # "L10.x" sorts before "L2.x" — a sorted rebuild would silently break
+    # resume bit-identity for models with >= 10 layers
+    for mod in registry(cfg):
+        if mod.name not in present:
+            continue
+        kw = {f: data[f"{mod.name}::{f}"] for f in _DB_FIELDS}
+        out[mod.name] = ModuleDB(
+            mod=mod, base_norm=float(data[f"{mod.name}::base_norm"]), **kw)
+    return out
+
+
+def _result_payload(res: SearchResult) -> Dict:
+    return {"assignment": {k: int(v) for k, v in res.assignment.items()},
+            "runtime": float(res.runtime), "speedup": float(res.speedup),
+            "score": float(res.score),
+            "coeffs": np.asarray(res.coeffs, np.float64).tolist(),
+            "n_evals": int(res.n_evals)}
+
+
+def _result_from(entry: Dict) -> SearchResult:
+    return SearchResult(
+        assignment={k: int(v) for k, v in entry["assignment"].items()},
+        runtime=float(entry["runtime"]), speedup=float(entry["speedup"]),
+        score=float(entry["score"]),
+        coeffs=np.asarray(entry["coeffs"], np.float64),
+        n_evals=int(entry.get("n_evals", 0)))
+
+
+# ----------------------------------------------------------------------
+# family engine
+# ----------------------------------------------------------------------
+
+DataSource = Union[Iterator[Dict], Callable[[int], Iterator[Dict]]]
+
+
 def gradual_prune(cfg, params, env, targets: Sequence[float],
-                  data: Iterator[Dict], calib_batches: List[Dict], *,
+                  data: DataSource, calib_batches: List[Dict], *,
                   tcfg: Optional[TrainConfig] = None,
                   finetune_steps: int = 50, search_steps: int = 50,
                   search_pop: int = 16, search_batched: bool = True,
                   latency_backend: str = "costmodel",
                   latency_kw: Optional[Dict] = None,
-                  mesh=None, data_axes=None, ckpt_dir: str = None,
-                  seed: int = 0,
+                  mesh=None, data_axes=None,
+                  mc: Optional[MeshConfig] = None, specs=None,
+                  ckpt_dir: Optional[str] = None,
+                  ckpt_every: Optional[int] = None,
+                  seed: int = 0, resume: bool = True,
+                  stop_after: Optional[tuple] = None,
                   verbose: bool = False) -> List[GradualVariant]:
-    """Gradual family pruning. ``latency_kw`` (e.g. ``{"cache_dir": ...}``)
-    routes the measured-latency backend through the persistent cache —
-    the table is measured once for the whole family; ``mesh``/``data_axes``
-    shard the per-target re-calibration over the mesh's data axes.
+    """Stage-checkpointed gradual family pruning (module docstring has the
+    manifest/resume contract).
+
+    ``latency_kw`` (e.g. ``{"cache_dir": ...}``) routes the measured
+    backend through the persistent cache — the table is measured once for
+    the whole family. ``mesh``/``data_axes`` shard the per-target
+    re-calibration over the mesh's data axes; with ``specs`` (from
+    ``model_init``) the distillation finetune also runs mesh-sharded
+    through the trainer's ``jit_train_step`` path (``mc`` derived from the
+    mesh when omitted), including int8-EF gradient compression when
+    ``tcfg.grad_compression`` asks for it.
+
+    ``data`` is an iterator (legacy; resume replays from wherever the
+    caller's iterator happens to be) or a callable ``global_step ->
+    iterator`` — the engine then draws target ``i``'s batches from global
+    steps ``[i*finetune_steps, (i+1)*finetune_steps)``, which makes
+    killed-and-resumed runs bit-identical to uninterrupted ones.
 
     Each target's SPDY search runs through the population-batched engine
     (``search_pop`` candidates stitched+scored per device round); the
     family cannot share one search pass here because every target
     re-calibrates on the just-finetuned model, but per-target RNG streams
-    are still fold-in derived from ``seed``."""
+    are still fold-in derived from ``seed``.
+    """
     tcfg = tcfg or TrainConfig(learning_rate=8e-5, warmup_steps=5,
                                total_steps=finetune_steps,
                                distill_logit=1.0, distill_token=0.5)
+    if stop_after is not None:
+        if stop_after[1] not in ("hessians", "db", "search", "finetune"):
+            raise ValueError(f"stop_after stage {stop_after[1]!r} is not a "
+                             f"pipeline stage")
+        if stop_after[1] == "finetune" and len(stop_after) < 3:
+            raise ValueError("stop_after=(i, 'finetune') needs a step "
+                             "index: (i, 'finetune', step)")
+    targets = [float(t) for t in sorted(targets)]
+    ckpt_every = ckpt_every or max(1, min(50, finetune_steps))
+    run_dir = family_run_dir(cfg, targets, seed, base=ckpt_dir)
+    if not resume:
+        import shutil
+        shutil.rmtree(run_dir, ignore_errors=True)
+    import dataclasses
+    lat_kw = {k: repr(v) for k, v in sorted((latency_kw or {}).items())
+              if k != "cache_dir"}  # the cache location never changes results
+    header = {"cfg": cfg.name, "targets": targets, "seed": int(seed),
+              "finetune_steps": int(finetune_steps),
+              "search_steps": int(search_steps),
+              "search_pop": int(search_pop),
+              "search_batched": bool(search_batched),
+              "run_key": family_run_key(cfg, targets, seed),
+              # every input that changes the results is fingerprinted:
+              # resuming a 'done' manifest with a retrained model, new
+              # calib set, different env or trainer hyper-parameters must
+              # fail loudly instead of handing back stale artifacts
+              "inputs": {"params": _tree_digest(params),
+                         "calib": _tree_digest(calib_batches),
+                         "env": repr(env),
+                         "tcfg": dataclasses.asdict(tcfg),
+                         "latency": [latency_backend, lat_kw]}}
+    frs = FamilyRunState(run_dir, header)
+
     teacher = jax.tree.map(lambda a: a, params)  # dense teacher
     table = build_table(cfg, env, backend=latency_backend,
                         **(latency_kw or {}))
     loss_eval = calib_loss_fn(cfg, calib_batches[:1])
 
+    def make_trainer(tdir, masks=None):
+        # the trainer mesh path needs the logical-axis specs; mesh without
+        # specs keeps the documented calibration-only sharding instead of
+        # blowing up after hours of hessians/db/search work
+        use_mesh = mesh if specs is not None else None
+        return Trainer(cfg, tcfg, ckpt_dir=os.path.join(tdir, "ckpt"),
+                       teacher_params=teacher, masks=masks,
+                       ckpt_every=ckpt_every, mesh=use_mesh,
+                       mc=mc if use_mesh is not None else None,
+                       specs=specs)
+
+    def preempt_at(i, stage):
+        if stop_after is not None and tuple(stop_after[:2]) == (i, stage):
+            raise FamilyPreempted(
+                f"simulated preemption after {stage} of target index {i} "
+                f"(run dir {run_dir})")
+
     current = params
     out: List[GradualVariant] = []
     seeds = np.random.SeedSequence(seed).spawn(len(targets))
     loss_b = None  # one compiled batched loss for the whole family
-    for i, target in enumerate(sorted(targets)):
-        # re-calibrate on the *current* model (Hessians drift as we prune)
-        hessians = collect_hessians(cfg, current, calib_batches,
-                                    mesh=mesh, data_axes=data_axes)
-        db = build_database(cfg, current, hessians)
-        cache = SnapshotCache(cfg, db)
-        if loss_b is None:
-            loss_b = batched_calib_loss_fn(cfg, calib_batches[:1],
-                                           cache.batch_axes(current))
-        res = search(db, table, target, steps=search_steps,
-                     pop=search_pop, batched=search_batched, seed=seeds[i],
-                     eval_fn=lambda a: loss_eval(
-                         apply_assignment(cfg, current, db, a, cache=cache)),
-                     eval_batched=make_batched_eval(cfg, current, cache,
-                                                    calib_batches[:1],
-                                                    loss_b=loss_b))
-        masked = apply_assignment(cfg, current, db, res.assignment,
-                                  cache=cache)
-        loss_before = loss_eval(masked)
+    for i, target in enumerate(targets):
+        tkey = _tkey(target)
+        tdir = os.path.join(run_dir, f"t{tkey}")
+        entry = frs.entry(tkey)
 
+        if entry["stage"] == "done":
+            # completed target: reconstruct the variant from artifacts —
+            # no Hessians, no DB build, no search, no finetune. The final
+            # params ride in their own params.npz (written at completion)
+            # so this path never pays for restoring optimizer/EF state.
+            db = _load_db(cfg, os.path.join(tdir, "db.npz"))
+            res = _result_from(entry)
+            ppath = os.path.join(tdir, "params.npz")
+            if not os.path.exists(ppath):
+                raise RuntimeError(
+                    f"manifest says target {target} is done but its final "
+                    f"params artifact is missing ({ppath})")
+            current = restore_pytree(current, ppath)
+            pm = shrink(cfg, current, db, res.assignment)
+            out.append(GradualVariant(
+                target=target, achieved=res.speedup,
+                assignment=res.assignment, params=current, pruned=pm,
+                loss_before_ft=float(entry["loss_before_ft"]),
+                loss_after_ft=float(entry["loss_after_ft"])))
+            if verbose:
+                print(f"[gradual] {target}x restored (stage done)")
+            continue
+
+        # ---- stages: hessians (re-calibrate on the *current* model —
+        # Hessians drift as we prune) + database. With the DB artifact
+        # already on disk the Hessians are dead weight, so they are
+        # neither recomputed nor reloaded. ----
+        dpath = os.path.join(tdir, "db.npz")
+        if frs.stage_done(tkey, "db"):
+            db = _load_db(cfg, dpath)
+        else:
+            hpath = os.path.join(tdir, "hessians.npz")
+            if frs.stage_done(tkey, "hessians"):
+                hessians = _load_hessians(hpath)
+            else:
+                hessians = collect_hessians(cfg, current, calib_batches,
+                                            mesh=mesh, data_axes=data_axes)
+                _save_hessians(hpath, hessians)
+                frs.record(tkey, "hessians")
+                preempt_at(i, "hessians")
+            db = build_database(cfg, current, hessians)
+            _save_db(dpath, db)
+            frs.record(tkey, "db")
+            preempt_at(i, "db")
+        cache = SnapshotCache(cfg, db)
+
+        # ---- stage: SPDY search ----
+        if frs.stage_done(tkey, "search"):
+            res = _result_from(entry)
+            masked = apply_assignment(cfg, current, db, res.assignment,
+                                      cache=cache)
+            loss_before = float(entry["loss_before_ft"])
+        else:
+            if loss_b is None:
+                loss_b = batched_calib_loss_fn(cfg, calib_batches[:1],
+                                               cache.batch_axes(current))
+            res = search(db, table, target, steps=search_steps,
+                         pop=search_pop, batched=search_batched,
+                         seed=seeds[i],
+                         eval_fn=lambda a: loss_eval(apply_assignment(
+                             cfg, current, db, a, cache=cache)),
+                         eval_batched=make_batched_eval(
+                             cfg, current, cache, calib_batches[:1],
+                             loss_b=loss_b))
+            masked = apply_assignment(cfg, current, db, res.assignment,
+                                      cache=cache)
+            loss_before = loss_eval(masked)
+            frs.record(tkey, "search", loss_before_ft=loss_before,
+                       **_result_payload(res))
+            preempt_at(i, "search")
+
+        # ---- stage: distillation finetune ----
         masks = masks_from_assignment(cfg, masked, db, res.assignment)
-        trainer = Trainer(cfg, tcfg, ckpt_dir=(ckpt_dir or "/tmp/ziplm_ckpt")
-                          + f"/t{target}", teacher_params=teacher,
-                          masks=masks, ckpt_every=max(finetune_steps, 1))
+        trainer = make_trainer(tdir, masks=masks)
         state = trainer.init_or_restore(masked)
-        state = trainer.fit(state, data, steps=finetune_steps)
+        start = int(state.step)
+        data_iter = data(i * finetune_steps + start) if callable(data) \
+            else data
+        fit_stop = None
+        if stop_after is not None and tuple(stop_after[:2]) == \
+                (i, "finetune") and len(stop_after) > 2:
+            fit_stop = int(stop_after[2])
+        if start < finetune_steps:
+            frs.log_exec(tkey, "finetune")
+        state = trainer.fit(state, data_iter, steps=finetune_steps,
+                            stop_after=fit_stop)
+        if int(state.step) < finetune_steps:
+            # simulated stop_after kill or a real SIGTERM preemption — the
+            # trainer checkpointed; re-invoking resumes from that step
+            raise FamilyPreempted(
+                f"preempted mid-finetune of target {target} at step "
+                f"{int(state.step)} (run dir {run_dir})")
         current = state.params
         loss_after = loss_eval(current)
+        save_pytree(current, os.path.join(tdir, "params.npz"))
+        frs.record(tkey, "done", executed=False, loss_after_ft=loss_after)
 
         pm = shrink(cfg, current, db, res.assignment)
         out.append(GradualVariant(

@@ -43,11 +43,18 @@ def token_distill(student_hiddens, teacher_hiddens, mask=None):
 
 def distillation_loss(cfg, params, teacher_params, batch, *, l_task=1.0,
                       l_logit=0.0, l_token=0.0):
-    """Combined loss; teacher forward is gradient-free."""
+    """Combined loss; teacher forward is gradient-free.
+
+    Returns ``(total, metrics)``. The metrics dict always carries the same
+    keys (``loss``/``task_loss``/``logit_kl``/``token_l2``, inactive terms
+    as 0.0) so it can ride through ``jax.value_and_grad(..., has_aux=True)``
+    and microbatch scans with one static structure per config."""
     need_hiddens = l_token > 0.0
     out = loss_fn(cfg, params, batch, collect_hiddens=need_hiddens)
     total = l_task * out["loss"]
-    metrics = {"task_loss": out["loss"]}
+    metrics = {"task_loss": out["loss"],
+               "logit_kl": jnp.zeros((), jnp.float32),
+               "token_l2": jnp.zeros((), jnp.float32)}
     if teacher_params is not None and (l_logit > 0.0 or l_token > 0.0):
         t_out = jax.lax.stop_gradient(
             forward(cfg, teacher_params, batch["tokens"],

@@ -40,6 +40,17 @@ def make_mesh_from_config(mc: MeshConfig) -> Mesh:
     return make_mesh(mc.shape, mc.axes)
 
 
+def mesh_config_for(mesh: Mesh, **kw) -> MeshConfig:
+    """Derive a MeshConfig matching an existing mesh: pure-FSDP when the
+    mesh has no "model" axis (small-model data-parallel training), the
+    default TP+FSDP profile otherwise. ``kw`` overrides profile knobs."""
+    shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    kw.setdefault(
+        "profile",
+        "tp_fsdp" if "model" in mesh.axis_names else "pure_fsdp")
+    return MeshConfig(shape=shape, axes=tuple(mesh.axis_names), **kw)
+
+
 def _axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

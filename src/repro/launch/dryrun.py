@@ -125,13 +125,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         st_sh = state_shardings(mesh, mc, state, specs)
         b_sh = jax.tree.map(
             lambda l: batch_sharding(mesh, mc, l.shape[0]), batch_specs)
-        metr = NamedSharding(mesh, P())
         step_fn = make_train_step(cfg, tcfg, mesh=mesh, mc=mc,
                                   grad_shardings=st_sh.params)
+        # metrics are all scalars (incl. the distillation aux terms);
+        # leave their shardings to XLA instead of spelling the dict out
         jitted = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
-                         out_shardings=(st_sh, {"loss": metr,
-                                                "grad_norm": metr,
-                                                "lr": metr}),
+                         out_shardings=(st_sh, None),
                          donate_argnums=(0,))
         lowered = jitted.lower(state, batch_specs)
     elif shape_cfg.mode == "prefill":

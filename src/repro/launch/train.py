@@ -44,6 +44,7 @@ def main(argv=None):
     from ..configs import get_config, smoke_config
     from ..configs.base import TrainConfig
     from ..data import synthetic_stream
+    from ..distributed.sharding import make_mesh, mesh_config_for
     from ..models import model_init
     from ..train.trainer import Trainer
 
@@ -55,8 +56,16 @@ def main(argv=None):
                        total_steps=args.steps,
                        microbatches=args.microbatches,
                        grad_compression=args.grad_compression)
+    # multi-device: data-parallel mesh -> the trainer's jit_train_step
+    # path (FSDP shardings; int8_ef compresses the DP all-reduce). On one
+    # device int8_ef has nothing to compress and the Trainer raises.
+    mesh = None
+    if jax.device_count() > 1:
+        mesh = make_mesh((jax.device_count(),), ("data",))
     trainer = Trainer(cfg, tcfg, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=args.ckpt_every,
+                      ckpt_every=args.ckpt_every, mesh=mesh,
+                      mc=mesh_config_for(mesh) if mesh else None,
+                      specs=specs if mesh else None,
                       install_signal_handler=True)
     state = trainer.init_or_restore(params)
     data = synthetic_stream(cfg, args.batch, args.seq,

@@ -15,8 +15,14 @@ import jax
 import jax.numpy as jnp
 
 
-def int8_ef_init(params):
-    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+def int8_ef_init(params, nshards: int = 1):
+    """Per-shard error-feedback residual pytree.
+
+    Leaves gain a leading ``nshards`` axis (each data shard carries its own
+    residual of the full gradient); shard it over the data axes so every
+    device holds exactly one ``(1, *shape)`` slice."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((nshards,) + tuple(p.shape), jnp.float32), params)
 
 
 def _compress_one(g, err, axes) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -4,6 +4,25 @@ optional distillation + optional int8 error-feedback gradient compression.
 State layout keeps fp32 master params; compute casts to cfg.dtype at use.
 Under FSDP sharding rules everything (params / grads / m / v / EF error)
 is fully sharded — ZeRO-3 semantics from sharding alone.
+
+Gradient paths:
+
+* default — gradients come out of a global-view ``value_and_grad`` (XLA
+  inserts the data all-reduce); ``grad_shardings`` pins the microbatch
+  accumulation carry to the FSDP param shardings so the carry is
+  reduce-scattered instead of replicated.
+* ``grad_compression="int8_ef"`` — the loss/grad computation runs inside a
+  ``shard_map`` over the mesh data axes: each shard takes grads on its
+  local batch slice, quantizes them to int8 against a psum-max consensus
+  scale, and the int8 ``psum`` IS the data all-reduce (4x fewer bytes than
+  fp32); the quantization residual is carried per shard in
+  ``TrainState.ef_err`` (leading shard axis, sharded over the data axes).
+  Configuring compression without a mesh/data axes raises — there is no
+  all-reduce to compress on one device.
+
+The aux metrics of ``distillation_loss`` (task_loss / logit_kl / token_l2)
+ride through ``value_and_grad(..., has_aux=True)`` into the returned
+metrics dict, so distillation runs can log them without a second forward.
 """
 from __future__ import annotations
 
@@ -12,12 +31,15 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import MeshConfig, TrainConfig
 from ..distill.losses import distillation_loss
-from ..distributed.sharding import batch_sharding, param_shardings
+from ..distributed.activation import activation_context
+from ..distributed.sharding import (axis_size, batch_sharding,
+                                    param_shardings)
 from ..optim.adamw import adamw_init, adamw_update, clip_by_global_norm
 from ..optim.compression import int8_ef_compress, int8_ef_init
 from ..optim.schedule import make_schedule
@@ -30,20 +52,42 @@ class TrainState(NamedTuple):
     ef_err: Any = None          # int8 error-feedback residuals (optional)
 
 
-def make_train_state(cfg, params, tcfg: TrainConfig) -> TrainState:
-    ef = int8_ef_init(params) if tcfg.grad_compression == "int8_ef" else None
+def _ef_nshards(tcfg: TrainConfig, mesh, mc: Optional[MeshConfig]) -> int:
+    """Shard count the EF residual is carried over; raises on a
+    misconfigured (no data axes) compression setup."""
+    if tcfg.grad_compression != "int8_ef":
+        return 0
+    if mesh is None or mc is None or not tuple(mc.data_axes):
+        raise ValueError(
+            "grad_compression='int8_ef' compresses the data-parallel "
+            "all-reduce and needs a mesh with data axes (pass mesh= and "
+            "mc= / MeshConfig with non-empty data_axes); without them the "
+            "configuration would silently train uncompressed")
+    return axis_size(mesh, tuple(mc.data_axes))
+
+
+def make_train_state(cfg, params, tcfg: TrainConfig, *, mesh=None,
+                     mc: Optional[MeshConfig] = None) -> TrainState:
+    n = _ef_nshards(tcfg, mesh, mc)
+    ef = int8_ef_init(params, n) if n else None
     return TrainState(params=params, opt=adamw_init(params),
                       step=jnp.zeros((), jnp.int32), ef_err=ef)
 
 
 def state_shardings(mesh, mc: MeshConfig, state: TrainState, specs):
     pshard = param_shardings(mesh, mc, state.params, specs)
+    ef = None
+    if state.ef_err is not None:
+        # EF leaves are (nshards, *param_shape): one residual slice per
+        # data shard, so only the leading axis shards
+        ef_sh = NamedSharding(mesh, P(tuple(mc.data_axes)))
+        ef = jax.tree.map(lambda _: ef_sh, state.ef_err)
     return TrainState(
         params=pshard,
         opt={"m": pshard, "v": pshard,
              "count": NamedSharding(mesh, P())},
         step=NamedSharding(mesh, P()),
-        ef_err=None if state.ef_err is None else pshard)
+        ef_err=ef)
 
 
 def _split_microbatches(batch: Dict, n: int, mesh=None,
@@ -75,6 +119,8 @@ def make_train_step(cfg, tcfg: TrainConfig, *, teacher_params=None,
     """
     schedule = make_schedule(tcfg.learning_rate, tcfg.warmup_steps,
                              tcfg.total_steps)
+    compress = _ef_nshards(tcfg, mesh, mc) > 0
+    data_axes = tuple(mc.data_axes) if mc is not None else ()
 
     def _pin(tree):
         if grad_shardings is None:
@@ -88,31 +134,62 @@ def make_train_step(cfg, tcfg: TrainConfig, *, teacher_params=None,
             cfg, params, teacher_params, mb, l_task=tcfg.distill_task,
             l_logit=tcfg.distill_logit, l_token=tcfg.distill_token)
 
-    grad_fn = jax.value_and_grad(lambda p, mb: loss_for(p, mb)[0])
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def accum_grads(params, batch, *, constrain: bool):
+        """(aux_metrics, grads) on ``batch``, microbatch-accumulated.
+        ``constrain=False`` inside shard_map (global-view sharding
+        constraints are illegal there)."""
+        n_micro = tcfg.microbatches
+        pin = _pin if constrain else (lambda t: t)
+        if n_micro > 1:
+            mbs = _split_microbatches(batch, n_micro,
+                                      mesh if constrain else None, mc)
+
+            def acc_body(g_acc, mb):
+                (_, aux), g = grad_fn(params, mb)
+                g_acc = pin(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, pin(g)))
+                return g_acc, aux
+
+            zeros = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, aux_stack = jax.lax.scan(acc_body, zeros, mbs)
+            aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), aux_stack)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        else:
+            (_, aux), grads = grad_fn(params, batch)
+        return aux, grads
+
+    if compress:
+        def _sharded_grads(params, batch, ef):
+            # per-shard body: batch is this shard's slice, ef is its
+            # (1, *shape) residual slice
+            ef = jax.tree.map(lambda e: e[0], ef)
+            aux, grads = accum_grads(params, batch, constrain=False)
+            grads, new_ef = int8_ef_compress(grads, ef, data_axes)
+            aux = jax.tree.map(lambda a: jax.lax.pmean(a, data_axes), aux)
+            return aux, grads, jax.tree.map(lambda e: e[None], new_ef)
+
+        sharded_grads = shard_map(
+            _sharded_grads, mesh=mesh,
+            in_specs=(P(), P(data_axes), P(data_axes)),
+            out_specs=(P(), P(), P(data_axes)),
+            check_rep=False)
 
     def train_step(state: TrainState, batch: Dict):
         params = state.params
-        n_micro = tcfg.microbatches
-        if n_micro > 1:
-            mbs = _split_microbatches(batch, n_micro, mesh, mc)
-
-            def acc_body(carry, mb):
-                loss_acc, g_acc = carry
-                loss, g = grad_fn(params, mb)
-                g_acc = _pin(jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), g_acc, _pin(g)))
-                return (loss_acc + loss, g_acc), None
-
-            zeros = _pin(jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params))
-            (loss, grads), _ = jax.lax.scan(
-                acc_body, (jnp.zeros((), jnp.float32), zeros), mbs)
-            loss = loss / n_micro
-            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if compress:
+            # the activation-context constraint hooks inside the model
+            # forward are global-view ops; they must stay no-ops while the
+            # shard_map body traces
+            with activation_context(None, None):
+                aux, grads, new_ef = sharded_grads(params, batch,
+                                                   state.ef_err)
         else:
-            loss, grads = grad_fn(params, batch)
+            aux, grads = accum_grads(params, batch, constrain=True)
+            new_ef = state.ef_err
 
-        new_ef = state.ef_err
         grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         lr = schedule(state.step)
         new_params, new_opt = adamw_update(
@@ -121,7 +198,7 @@ def make_train_step(cfg, tcfg: TrainConfig, *, teacher_params=None,
         if masks is not None:
             new_params = jax.tree.map(
                 lambda p, m: p * m.astype(p.dtype), new_params, masks)
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        metrics = {**aux, "grad_norm": gnorm, "lr": lr}
         return TrainState(params=new_params, opt=new_opt,
                           step=state.step + 1, ef_err=new_ef), metrics
 
@@ -136,17 +213,23 @@ def make_eval_step(cfg):
     return eval_step
 
 
-def jit_train_step(cfg, tcfg, mesh, mc: MeshConfig, state, specs, batch_shape,
+def jit_train_step(cfg, tcfg, mesh, mc: MeshConfig, state, specs, batch,
                    **kw):
-    """jit with explicit in/out shardings and donated state."""
-    step_fn = make_train_step(cfg, tcfg, mesh=mesh, mc=mc, **kw)
+    """jit with explicit in/out shardings and donated state.
+
+    ``batch`` is an example batch (pytree of arrays or ShapeDtypeStructs);
+    each leaf's leading dim shards over the mesh data axes. Unless
+    overridden, the microbatch grad-accum carry is pinned to the FSDP
+    param shardings (``grad_shardings``). Donation is skipped on CPU where
+    it is a no-op that only emits warnings.
+    """
     st_sh = state_shardings(mesh, mc, state, specs)
+    kw.setdefault("grad_shardings", st_sh.params)
+    step_fn = make_train_step(cfg, tcfg, mesh=mesh, mc=mc, **kw)
     b_sh = jax.tree.map(
-        lambda _: batch_sharding(mesh, mc, batch_shape[0]), batch_shape)
-    metr_sh = NamedSharding(mesh, P())
+        lambda x: batch_sharding(mesh, mc, x.shape[0]), batch)
+    donate = mc.donate and jax.default_backend() != "cpu"
     return jax.jit(step_fn,
                    in_shardings=(st_sh, b_sh),
-                   out_shardings=(st_sh, {"loss": metr_sh,
-                                          "grad_norm": metr_sh,
-                                          "lr": metr_sh}),
-                   donate_argnums=(0,) if mc.donate else ())
+                   out_shardings=(st_sh, None),
+                   donate_argnums=(0,) if donate else ())

@@ -6,6 +6,17 @@
   ``straggler_factor`` x the running median are logged and counted — on a
   real pod this feeds the reschedule/hot-spare decision, here it is
   observable state the tests assert on.
+
+Mesh path: pass ``mesh`` (plus ``specs`` from ``model_init``; ``mc`` is
+derived from the mesh when omitted) and the trainer routes through
+``jit_train_step`` — FSDP ``state_shardings`` on params/opt/EF state, the
+microbatch grad-accum carry pinned to the param shardings, the teacher
+device_put with the same FSDP shardings so the distillation forward
+shards too, and ``grad_compression="int8_ef"`` running its compressed
+all-reduce under the mesh data axes. The jitted step is built lazily on
+the first batch (its sharding layout needs an example batch); restore
+re-places checkpoint leaves with the mesh shardings, so resuming onto a
+different mesh shape is the same code path.
 """
 from __future__ import annotations
 
@@ -18,8 +29,10 @@ import jax
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
-from ..configs.base import TrainConfig
-from .train_step import TrainState, make_train_state, make_train_step
+from ..configs.base import MeshConfig, TrainConfig
+from ..distributed.sharding import mesh_config_for, param_shardings
+from .train_step import (TrainState, jit_train_step, make_train_state,
+                         make_train_step, state_shardings)
 
 
 @dataclass
@@ -44,15 +57,34 @@ class Trainer:
     def __init__(self, cfg, tcfg: TrainConfig, *, ckpt_dir: str,
                  teacher_params=None, masks=None, ckpt_every: int = 50,
                  keep: int = 3, step_fn=None, log_every: int = 10,
-                 install_signal_handler: bool = False):
+                 install_signal_handler: bool = False, mesh=None,
+                 mc: Optional[MeshConfig] = None, specs=None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.watchdog = StragglerWatchdog()
-        self.step_fn = step_fn or jax.jit(make_train_step(
-            cfg, tcfg, teacher_params=teacher_params, masks=masks))
+        self.mesh = mesh
+        self.mc = mc if mc is not None or mesh is None \
+            else mesh_config_for(mesh)
+        self.specs = specs
+        self._st_sh = None
+        if mesh is not None and specs is None:
+            raise ValueError("Trainer(mesh=...) needs the model's logical "
+                             "axis specs (model_init's second return)")
+        if mesh is not None and teacher_params is not None:
+            # sharded teacher forward: the frozen teacher follows the same
+            # FSDP layout as the student instead of replicating per device
+            teacher_params = jax.device_put(
+                teacher_params,
+                param_shardings(mesh, self.mc, teacher_params, specs))
+        self.teacher_params = teacher_params
+        self.masks = masks
+        if step_fn is None and mesh is None:
+            step_fn = jax.jit(make_train_step(
+                cfg, tcfg, teacher_params=teacher_params, masks=masks))
+        self.step_fn = step_fn  # None -> mesh path, built on first batch
         self.preempted = False
         self.metrics_log: List[Dict] = []
         if install_signal_handler:
@@ -62,10 +94,15 @@ class Trainer:
         self.preempted = True
 
     def init_or_restore(self, params) -> TrainState:
-        state = make_train_state(self.cfg, params, self.tcfg)
+        state = make_train_state(self.cfg, params, self.tcfg,
+                                 mesh=self.mesh, mc=self.mc)
+        if self.mesh is not None:
+            self._st_sh = state_shardings(self.mesh, self.mc, state,
+                                          self.specs)
+            state = jax.device_put(state, self._st_sh)
         latest = self.ckpt.latest_step()
         if latest is not None:
-            restored = self.ckpt.restore(state)
+            restored = self.ckpt.restore(state, shardings=self._st_sh)
             if restored is not None:
                 print(f"[trainer] resumed from step {latest}")
                 return restored
@@ -79,6 +116,11 @@ class Trainer:
             if stop_after is not None and done >= stop_after:
                 break  # simulated preemption point for tests
             batch = next(data)
+            if self.step_fn is None:
+                self.step_fn = jit_train_step(
+                    self.cfg, self.tcfg, self.mesh, self.mc, state,
+                    self.specs, batch, teacher_params=self.teacher_params,
+                    masks=self.masks)
             t0 = time.perf_counter()
             state, metrics = self.step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
@@ -86,7 +128,10 @@ class Trainer:
             done = int(state.step)
             self.watchdog.observe(done, dt)
             if done % self.log_every == 0 or done == steps:
-                m = {k: float(v) for k, v in metrics.items()}
+                # one batched device->host transfer per logged step, not
+                # one blocking float() per metric
+                m = {k: float(v)
+                     for k, v in jax.device_get(metrics).items()}
                 m["step"] = done
                 m["step_time"] = dt
                 self.metrics_log.append(m)

@@ -38,6 +38,33 @@ def test_logit_kl_nonnegative_and_directional():
     assert float(logit_kl(t, t)) < 1e-6
 
 
+def test_trainer_logs_distill_metrics(tiny_cfg, tiny_params, tmp_path):
+    """The trainer surfaces the distillation aux metrics (task_loss /
+    logit_kl / token_l2) in metrics_log — the pre-fix grad_fn threw them
+    away (`value_and_grad` without has_aux), so a distillation run logged
+    only loss/grad_norm/lr."""
+    from repro.configs.base import TrainConfig
+    from repro.data import synthetic_stream
+    from repro.models import model_init
+    from repro.train.trainer import Trainer
+
+    teacher = tiny_params
+    student, _ = model_init(tiny_cfg, jax.random.key(42))
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=4,
+                       distill_logit=1.0, distill_token=0.5)
+    tr = Trainer(tiny_cfg, tcfg, ckpt_dir=str(tmp_path), ckpt_every=100,
+                 log_every=1, teacher_params=teacher)
+    state = tr.init_or_restore(student)
+    tr.fit(state, synthetic_stream(tiny_cfg, 8, 32, seed=5), steps=4)
+    assert len(tr.metrics_log) == 4
+    for m in tr.metrics_log:
+        # student != teacher, so both distillation terms are strictly live
+        assert m["logit_kl"] > 0.0
+        assert m["token_l2"] > 0.0
+        assert m["task_loss"] > 0.0
+        assert m["loss"] > m["task_loss"] * tcfg.distill_task
+
+
 def test_distillation_improves_student_recovery(tiny_cfg, trained_tiny,
                                                 tiny_calib):
     """Finetuning a pruned student WITH token+logit distillation recovers

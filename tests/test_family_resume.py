@@ -1,0 +1,199 @@
+"""Family-level fault tolerance of the gradual pruning engine:
+
+* a run killed mid-target and resumed is bit-identical to an
+  uninterrupted same-seed run, re-executing only the in-flight stage
+  (asserted via the manifest's stage-execution bookkeeping);
+* per-run directories are derived from (cfg name, targets, seed), so
+  interleaved runs with different seeds can never cross-restore each
+  other's trainer checkpoints or manifests.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.pipeline import (FamilyPreempted, FamilyRunState,
+                                 family_run_dir, family_run_key,
+                                 gradual_prune)
+from repro.data import calibration_batches, synthetic_stream
+from repro.runtime.costmodel import InferenceEnv
+
+ENV = InferenceEnv(batch=8, seq=64, mode="prefill")
+FT_STEPS = 8
+TARGETS = [1.5, 2.0]
+
+
+def _kw(tiny_cfg):
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2,
+                       total_steps=FT_STEPS, distill_logit=1.0,
+                       distill_token=0.5)
+    return dict(tcfg=tcfg, finetune_steps=FT_STEPS, search_steps=4,
+                search_pop=4, ckpt_every=4)
+
+
+def _data(tiny_cfg):
+    return lambda step: synthetic_stream(tiny_cfg, 16, 64, seed=99,
+                                         start_step=step)
+
+
+def _run(tiny_cfg, params, calib, base, seed=0, **extra):
+    return gradual_prune(tiny_cfg, params, ENV, TARGETS, _data(tiny_cfg),
+                         calib, ckpt_dir=base, seed=seed,
+                         **_kw(tiny_cfg), **extra)
+
+
+def _manifest(tiny_cfg, base, seed=0):
+    path = os.path.join(family_run_dir(tiny_cfg, TARGETS, seed, base),
+                        "family.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _tree_equal(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def family_calib(tiny_cfg):
+    return calibration_batches(tiny_cfg, 16, 64, batch=8)
+
+
+@pytest.fixture(scope="module")
+def uninterrupted(tiny_cfg, tiny_params, family_calib, tmp_path_factory):
+    base = str(tmp_path_factory.mktemp("family_full"))
+    return _run(tiny_cfg, tiny_params, family_calib, base)
+
+
+def test_kill_mid_finetune_resume_bit_identical(tiny_cfg, tiny_params,
+                                                family_calib, tmp_path,
+                                                uninterrupted):
+    """Kill target #2 mid-finetune (after 6 of 8 steps, last ckpt at 4),
+    resume, and compare against the uninterrupted same-seed run."""
+    base = str(tmp_path)
+    with pytest.raises(FamilyPreempted):
+        _run(tiny_cfg, tiny_params, family_calib, base,
+             stop_after=(1, "finetune", 6))
+    resumed = _run(tiny_cfg, tiny_params, family_calib, base)
+
+    assert [v.target for v in resumed] == [v.target for v in uninterrupted]
+    for vf, vr in zip(uninterrupted, resumed):
+        assert vf.assignment == vr.assignment          # bit-identical
+        assert _tree_equal(vf.params, vr.params)       # bit-identical
+        assert vf.loss_before_ft == vr.loss_before_ft
+        assert vf.loss_after_ft == vr.loss_after_ft
+
+    # stage bookkeeping: the resume (run 2) re-executed ONLY the in-flight
+    # finetune of the killed target — no Hessians, DB build, or search
+    man = _manifest(tiny_cfg, base)
+    run2 = [(e["target"], e["stage"]) for e in man["executed"]
+            if e["run"] == 2]
+    assert run2 == [("2", "finetune")]
+    run1 = [(e["target"], e["stage"]) for e in man["executed"]
+            if e["run"] == 1]
+    assert run1 == [("1.5", "hessians"), ("1.5", "db"), ("1.5", "search"),
+                    ("1.5", "finetune"), ("2", "hessians"), ("2", "db"),
+                    ("2", "search"), ("2", "finetune")]
+
+
+def test_kill_between_stages_resumes_next_stage(tiny_cfg, tiny_params,
+                                                family_calib, tmp_path,
+                                                uninterrupted):
+    """Kill right after target #2's DB is persisted: the resume must load
+    the Hessian/DB artifacts and execute only search + finetune."""
+    base = str(tmp_path)
+    with pytest.raises(FamilyPreempted):
+        _run(tiny_cfg, tiny_params, family_calib, base,
+             stop_after=(1, "db"))
+    resumed = _run(tiny_cfg, tiny_params, family_calib, base)
+    for vf, vr in zip(uninterrupted, resumed):
+        assert vf.assignment == vr.assignment
+        assert _tree_equal(vf.params, vr.params)
+    man = _manifest(tiny_cfg, base)
+    run2 = [(e["target"], e["stage"]) for e in man["executed"]
+            if e["run"] == 2]
+    assert run2 == [("2", "search"), ("2", "finetune")]
+
+
+def test_interleaved_runs_never_cross_restore(tiny_cfg, tiny_params,
+                                              family_calib, tmp_path):
+    """Two interleaved family runs with different seeds sharing one base
+    directory (the pre-fix shared literal "/tmp/ziplm_ckpt" scenario) keep
+    fully separate state: each preempted run resumes its OWN manifest and
+    trainer checkpoints, and finishes identical to its own solo run."""
+    base = str(tmp_path)
+    solo = {}
+    for seed in (0, 1):
+        solo[seed] = _run(tiny_cfg, tiny_params, family_calib,
+                          str(tmp_path / f"solo{seed}"), seed=seed)
+
+    # interleave: kill seed-0 mid-finetune, kill seed-1 mid-finetune,
+    # resume seed-0, resume seed-1 — all four in the same base dir
+    for seed in (0, 1):
+        with pytest.raises(FamilyPreempted):
+            _run(tiny_cfg, tiny_params, family_calib, base, seed=seed,
+                 stop_after=(1, "finetune", 6))
+    for seed in (0, 1):
+        resumed = _run(tiny_cfg, tiny_params, family_calib, base,
+                       seed=seed)
+        for vs, vr in zip(solo[seed], resumed):
+            assert vs.assignment == vr.assignment
+            assert _tree_equal(vs.params, vr.params)
+
+    d0 = family_run_dir(tiny_cfg, TARGETS, 0, base)
+    d1 = family_run_dir(tiny_cfg, TARGETS, 1, base)
+    assert d0 != d1 and os.path.isdir(d0) and os.path.isdir(d1)
+
+
+def test_run_dir_unique_per_family(tiny_cfg):
+    """The derived directory separates cfg / targets / seed variations and
+    never collapses to a shared literal."""
+    dirs = {
+        family_run_dir(tiny_cfg, [1.5, 2.0], 0),
+        family_run_dir(tiny_cfg, [1.5, 2.0], 1),
+        family_run_dir(tiny_cfg, [1.5, 3.0], 0),
+        family_run_dir(tiny_cfg.replace(name="other"), [1.5, 2.0], 0),
+    }
+    assert len(dirs) == 4
+    # target order must not matter (they are searched sorted)
+    assert family_run_key(tiny_cfg, [2.0, 1.5], 0) == \
+        family_run_key(tiny_cfg, [1.5, 2.0], 0)
+
+
+def test_bad_stop_after_rejected(tiny_cfg, tiny_params, family_calib,
+                                 tmp_path):
+    """A finetune kill point needs a step index, and unknown stages are
+    rejected up front — not silently ignored."""
+    with pytest.raises(ValueError, match="step"):
+        _run(tiny_cfg, tiny_params, family_calib, str(tmp_path),
+             stop_after=(1, "finetune"))
+    with pytest.raises(ValueError, match="stage"):
+        _run(tiny_cfg, tiny_params, family_calib, str(tmp_path),
+             stop_after=(0, "spdy"))
+
+
+def test_resume_with_changed_inputs_raises(tiny_cfg, tiny_params,
+                                           family_calib, tmp_path):
+    """Same (cfg, targets, seed) but retrained params: resume must fail
+    loudly instead of returning the stale family pruned from the old
+    params (the input fingerprints in the manifest header catch it)."""
+    base = str(tmp_path)
+    with pytest.raises(FamilyPreempted):
+        _run(tiny_cfg, tiny_params, family_calib, base,
+             stop_after=(0, "hessians"))
+    other = jax.tree.map(lambda p: p + 1e-3, tiny_params)
+    with pytest.raises(ValueError, match="different run"):
+        _run(tiny_cfg, other, family_calib, base)
+
+
+def test_header_mismatch_raises(tiny_cfg, tmp_path):
+    """Same directory, different family parameters -> loud error instead
+    of silently mixing checkpoints."""
+    run_dir = str(tmp_path / "run")
+    FamilyRunState(run_dir, {"cfg": tiny_cfg.name, "x": 1})
+    with pytest.raises(ValueError, match="different run"):
+        FamilyRunState(run_dir, {"cfg": tiny_cfg.name, "x": 2})
