@@ -27,8 +27,16 @@ used V100/A100 measurements (DESIGN.md §3).
             2-device CPU mesh (subprocess); appended to BENCH_db.json
   latency_cache  measured-table build cold vs warm (persistent cache hit);
             appended to BENCH_db.json
+  chaos     robustness-layer cost: armed-but-fault-free family overhead vs
+            clean, plus recovery overhead of a chaos run (NaN calibration
+            batch, transient async-ckpt write failure, kill mid-finetune,
+            corrupted db artifact rebuilt on resume); appended to
+            BENCH_db.json
 
 Run a subset with ``python benchmarks/run.py db_build spdy_eval``.
+``--faults SITE:MODE[@N][xC][~D],...`` installs a deterministic
+fault-injection plan (same grammar as ZIPLM_FAULTS) around whichever
+benches run.
 """
 from __future__ import annotations
 
@@ -949,6 +957,99 @@ def bench_gradual_family():
         f"{params_equal} {shard_txt}")
 
 
+def bench_chaos():
+    """Robustness-layer economics, three numbers: (1) the cost of running
+    fault-free with the full layer armed (a plan whose rules never reach
+    their Nth hit) — must be noise, and the outputs bit-identical to the
+    clean run; (2) the wall-clock of a genuinely faulty family run (NaN
+    calibration batch + transient async-checkpoint write failure + kill
+    mid-finetune); (3) the recovery overhead of resuming that run with a
+    corrupted db artifact (quarantine + rebuild).  ``--smoke`` shrinks it
+    to the CI scenario and writes the ``chaos_smoke`` key."""
+    import tempfile
+
+    from repro.core.pipeline import FamilyPreempted, family_run_dir
+    from repro.robustness import (FaultPlan, RobustnessReport,
+                                  corrupt_bytes, install)
+
+    if _SMOKE:
+        ft, search, pop, kill, every = 6, 3, 4, 4, 2
+    else:
+        ft, search, pop, kill, every = 15, 10, 8, 10, 5
+    params, _ = model_init(TINY, jax.random.key(0))
+    calib = calibration_batches(TINY, 24, 64, batch=8)   # 3 batches
+    targets = [1.5, 2.0]
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2, total_steps=ft,
+                       distill_logit=1.0, distill_token=0.5)
+    data = lambda step: synthetic_stream(TINY, 16, 64, seed=21,
+                                         start_step=step)
+    kw = dict(tcfg=tcfg, finetune_steps=ft, search_steps=search,
+              search_pop=pop, ckpt_every=every, seed=0)
+
+    def run(base, **extra):
+        t0 = time.perf_counter()
+        try:
+            v = gradual_prune(TINY, params, ENV, targets, data, calib,
+                              ckpt_dir=base, **kw, **extra)
+        except FamilyPreempted:
+            v = None
+        return time.perf_counter() - t0, v
+
+    run(tempfile.mkdtemp(prefix="bench_chaos_warm"))     # compile warmup
+    t_clean, v_clean = run(tempfile.mkdtemp(prefix="bench_chaos_clean"))
+
+    # (1) armed but fault-free: every site carries a rule that never fires
+    armed = FaultPlan.parse(",".join(
+        f"{s}:raise@1000000" for s in
+        ("calib.batch", "obs.cholesky", "db.artifact_write",
+         "ckpt.async_write", "spdy.batched_eval")))
+    with install(armed):
+        t_armed, v_armed = run(tempfile.mkdtemp(prefix="bench_chaos_armed"))
+    identical = (
+        all(a.assignment == b.assignment
+            for a, b in zip(v_clean, v_armed))
+        and all(bool(np.all(np.asarray(x) == np.asarray(y)))
+                for x, y in zip(jax.tree.leaves(v_clean[-1].params),
+                                jax.tree.leaves(v_armed[-1].params))))
+
+    # (2) chaos run: poisoned calib batch + transient ckpt write failure,
+    # killed mid-finetune of the second target
+    rep = RobustnessReport()
+    base = tempfile.mkdtemp(prefix="bench_chaos_faulty")
+    plan = FaultPlan.parse("calib.batch:nan@1,ckpt.async_write:oserror@0")
+    with install(plan):
+        t_chaos, _ = run(base, report=rep,
+                         stop_after=(1, "finetune", kill))
+
+    # (3) corrupt the second target's db artifact, then resume fault-free:
+    # quarantine + rebuild + finish the family
+    dpath = os.path.join(family_run_dir(TINY, targets, 0, base),
+                         "t2", "db.npz")
+    corrupt_bytes(dpath, seed=3)
+    t_recover, v_rec = run(base, report=rep)
+    recovered = (v_rec is not None
+                 and os.path.exists(dpath + ".corrupt")
+                 and all(np.isfinite(np.asarray(l)).all()
+                         for l in jax.tree.leaves(v_rec[-1].params)))
+    overhead = t_chaos + t_recover - t_clean
+
+    rec = {"config": TINY.name, "targets": targets, "smoke": _SMOKE,
+           "clean_s": t_clean, "armed_fault_free_s": t_armed,
+           "armed_overhead_frac": t_armed / max(t_clean, 1e-12) - 1.0,
+           "fault_free_bit_identical": identical,
+           "chaos_killed_run_s": t_chaos, "chaos_resume_s": t_recover,
+           "recovery_overhead_s": overhead,
+           "recovery_overhead_frac": overhead / max(t_clean, 1e-12),
+           "recovered": recovered,
+           "robustness": rep.as_dict()}
+    _write_bench_db({("chaos_smoke" if _SMOKE else "chaos"): rec})
+    row("chaos", t_clean * 1e6,
+        f"clean={t_clean:.1f}s armed={t_armed:.1f}s "
+        f"identical={identical} chaos={t_chaos:.1f}+{t_recover:.1f}s "
+        f"overhead={overhead:.1f}s recovered={recovered} "
+        f"detected={sum(rep.counts['detected'].values())}")
+
+
 def bench_roofline():
     files = sorted(glob.glob(os.path.join(
         os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
@@ -986,13 +1087,14 @@ BENCHES = {
     "spdy_search": bench_spdy_search,
     "calib_shard": bench_calib_shard,
     "latency_cache": bench_latency_cache,
+    "chaos": bench_chaos,
     "roofline": bench_roofline,
 }
 
 # benches that run on synthetic weights/hessians; no tiny-GPT2 training
 _NO_TRAIN = {"table7", "table3", "kernels", "db_build", "db_build_compact",
              "spdy_eval", "spdy_search", "calib_shard", "latency_cache",
-             "roofline", "gradual_family"}
+             "roofline", "gradual_family", "chaos"}
 
 # --smoke: shrink bench shapes/steps for the CI end-to-end pass
 # (currently honored by gradual_family; harmless elsewhere)
@@ -1005,10 +1107,18 @@ def main(argv=None) -> None:
     if "--smoke" in args:
         _SMOKE = True
         args = [a for a in args if a != "--smoke"]
+    faults_spec = None
+    if "--faults" in args:
+        i = args.index("--faults")
+        if i + 1 >= len(args):
+            raise SystemExit("--faults needs a spec: "
+                             "site:mode[@nth][xCOUNT][~DELAY],...")
+        faults_spec = args[i + 1]
+        del args[i:i + 2]
     flags = [a for a in args if a.startswith("-")]
     if flags:
         raise SystemExit(f"unrecognized option(s) {flags}; "
-                         f"usage: run.py [--smoke] "
+                         f"usage: run.py [--smoke] [--faults SPEC] "
                          f"[{' | '.join(sorted(BENCHES))}]")
     names = args
     unknown = [n for n in names if n not in BENCHES]
@@ -1017,10 +1127,18 @@ def main(argv=None) -> None:
                          f"available: {sorted(BENCHES)}")
     selected = names or list(BENCHES)
     print("name,us_per_call,derived")
-    if any(n not in _NO_TRAIN for n in selected):
-        trained_model()
-    for n in selected:
-        BENCHES[n]()
+    import contextlib
+
+    from repro.robustness import FaultPlan, install
+    ctx = (install(FaultPlan.parse(
+               faults_spec,
+               seed=int(os.environ.get("ZIPLM_FAULT_SEED", "0"))))
+           if faults_spec else contextlib.nullcontext())
+    with ctx:
+        if any(n not in _NO_TRAIN for n in selected):
+            trained_model()
+        for n in selected:
+            BENCHES[n]()
 
 
 if __name__ == "__main__":

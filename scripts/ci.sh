@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # One-command CI: tier-1 (fast, default pytest run), tier-2 (subprocess /
-# forced-multi-device mesh tests), and an end-to-end smoke pass of the
-# stage-checkpointed family engine (kill -> resume -> bit-identity checked
-# inside the bench, recorded in BENCH_db.json).
+# forced-multi-device mesh tests), the chaos tier (deterministic fault
+# injection / degradation-ladder scenarios), and end-to-end smoke passes
+# of the stage-checkpointed family engine and the robustness layer
+# (kill -> resume -> bit-identity / quarantine -> rebuild checked inside
+# the benches, recorded in BENCH_db.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -13,5 +15,11 @@ python -m pytest -x -q
 echo "== tier-2 (forced-multi-device subprocess tests) =="
 python -m pytest -m tier2 -q
 
+echo "== chaos (fault-injection scenarios) =="
+python -m pytest -m chaos -q
+
 echo "== gradual_family smoke bench =="
 python benchmarks/run.py gradual_family --smoke
+
+echo "== chaos smoke bench =="
+python benchmarks/run.py chaos --smoke

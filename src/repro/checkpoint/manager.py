@@ -7,7 +7,13 @@
 * mesh-agnostic restore: leaves are stored as full host arrays and re-placed
   with the *target* shardings — restoring to a different mesh shape
   (elastic rescale) is the same code path;
-* retention: keep the last ``keep`` checkpoints.
+* retention: keep the last ``keep`` checkpoints;
+* surfaced write errors: the async worker's failures are drained and
+  raised as :class:`CheckpointWriteError` from ``wait()``/``close()``
+  (a failed write must never report success and resume from a stale
+  step); transient ``OSError``\\ s are retried with bounded backoff
+  first (``robustness.healing.retry_io``, fault site
+  ``ckpt.async_write``).
 """
 from __future__ import annotations
 
@@ -22,6 +28,20 @@ from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+from ..robustness import faults as _faults
+from ..robustness.healing import retry_io as _retry_io
+
+
+class CheckpointWriteError(RuntimeError):
+    """One or more checkpoint writes failed (after bounded retries).
+    ``errors`` carries the drained worker exceptions."""
+
+    def __init__(self, errors):
+        self.errors = list(errors)
+        super().__init__(
+            f"{len(self.errors)} checkpoint write(s) failed: "
+            + "; ".join(repr(e) for e in self.errors[:3]))
 
 
 def atomic_write_json(path: str, obj) -> None:
@@ -134,7 +154,7 @@ class CheckpointManager:
                     return
                 step, host, _ = item
                 self._write(step, host)
-            except Exception as e:  # pragma: no cover
+            except Exception as e:
                 self._errors.append(e)
             finally:
                 # task_done AFTER the write hits disk: wait()/join() must
@@ -144,7 +164,14 @@ class CheckpointManager:
 
     def _write(self, step: int, host: Dict[str, np.ndarray]):
         path = self._ckpt_path(step)
-        digest = atomic_save_npz(path, host)
+        # bounded retry + backoff heals transient OSErrors (including
+        # injected ckpt.async_write FaultIOErrors); a persistent failure
+        # re-raises into _drain's error list and surfaces at wait()
+        digest, rule = _retry_io(lambda: atomic_save_npz(path, host),
+                                 site="ckpt.async_write")
+        if rule is not None and rule.mode == "corrupt":
+            plan = _faults.active_plan()
+            _faults.corrupt_bytes(path, seed=plan.seed if plan else 0)
         manifest = self._read_manifest()
         manifest["checkpoints"] = [c for c in manifest.get("checkpoints", [])
                                    if c["step"] != step]
@@ -165,13 +192,21 @@ class CheckpointManager:
         return load_json(self._manifest_path()) or {}
 
     def wait(self):
-        """Block until every queued save is durably on disk.
+        """Block until every queued save is durably on disk, then raise
+        :class:`CheckpointWriteError` if any write failed.
 
         Deterministic: ``join()`` returns only once the worker has called
         ``task_done`` for each item, which happens after ``_write``'s
         ``os.replace`` — so ``latest_step()`` after ``wait()`` always sees
-        the newest checkpoint."""
+        the newest checkpoint.  Errors are drained (cleared) on raise, so
+        a caller that handles the failure can keep using the manager."""
         self._q.join()
+        self._raise_pending_errors()
+
+    def _raise_pending_errors(self):
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise CheckpointWriteError(errs)
 
     def latest_step(self) -> Optional[int]:
         m = self._read_manifest()
@@ -200,3 +235,4 @@ class CheckpointManager:
             self._q.put(None)
             self._worker.join(timeout=10)
             self._worker = None
+        self._raise_pending_errors()

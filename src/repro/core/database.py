@@ -24,11 +24,73 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..robustness import faults as _faults
+from ..robustness.healing import damp_schedule
+from ..robustness.report import current_report
 from .obs import (build_hessian, module_drop_error, module_drop_errors,
                   prune_structured, prune_structured_batched,
                   prune_structured_batched_compact, prune_structured_compact)
 from .structures import (PrunableModule, get_matrix, level_grid, registry,
                          set_matrix)
+
+# damping-escalation ladder: retries beyond the caller's damp, each one
+# decade up (damp * 10**k) — bounded so a hopeless Hessian fails loudly
+DAMP_RETRIES = 4
+
+
+def _prune_healed(prune_fn, Ws, Hraw, *, group_size, n_remove, levels,
+                  use_kernel, damp):
+    """Run Algorithm 1 with numerical self-healing; returns host arrays
+    ``(snaps16, errs, orders)`` (with the caller's leading batch dim, if
+    any).
+
+    * non-finite ``PruneResult`` (snapshots or errors) -> rebuild
+      H/Hinv with the next damping rung and retry, bounded at
+      ``DAMP_RETRIES`` (the ``obs.cholesky`` fault site poisons Hinv
+      right before the prune, exercising exactly this path);
+    * a raising kernel path (Pallas trace/compile/runtime failure
+      surfacing at the prune call) -> one ``use_kernel=False`` retry at
+      the same rung (the outer rung of the kernels.ops ref-fallback
+      ladder — device-side failures inside a traced fori_loop cannot be
+      caught at the op boundary).
+
+    Rung 0 is bit-identical to the un-healed code: same damp, and the
+    finite check reads values that were going to be fetched anyway.
+    """
+    rep = current_report()
+    uk = use_kernel
+    rungs = damp_schedule(damp, DAMP_RETRIES)
+    attempt = 0
+    while True:
+        H = build_hessian(Hraw, rungs[attempt])
+        Hinv = jnp.linalg.inv(H)
+        Hinv = _faults.poison_array("obs.cholesky", Hinv)
+        try:
+            res = prune_fn(Ws, Hinv, group_size=group_size,
+                           n_remove=n_remove, levels=levels,
+                           use_kernel=uk)
+            snaps16 = np.asarray(res.snapshots.astype(jnp.float16))
+            errs = np.asarray(res.errors)
+            orders = np.asarray(res.order)
+        except Exception as e:
+            if not uk or isinstance(e, KeyboardInterrupt):
+                raise
+            rep.trip("kernel.pallas", reason=f"obs prune: {e!r}")
+            uk = False
+            continue
+        if np.isfinite(errs).all() and np.isfinite(snaps16).all():
+            if attempt:
+                rep.count("recovered", "obs.cholesky")
+                print(f"[robustness] obs: healed non-finite prune at "
+                      f"damp={rungs[attempt]:g} (rung {attempt})")
+            return snaps16, errs, orders
+        rep.count("detected", "obs.cholesky")
+        rep.count("retries", "obs.cholesky")
+        attempt += 1
+        if attempt >= len(rungs):
+            raise FloatingPointError(
+                f"OBS prune stayed non-finite through the damping ladder "
+                f"{rungs} — calibration Hessian is unusable")
 
 
 @dataclass
@@ -70,18 +132,15 @@ def _finish_module_db(mod: PrunableModule, levels: np.ndarray,
 def build_module_db(cfg, params, mod: PrunableModule, h_raw,
                     damp: float = 1e-4, compact: bool = False) -> ModuleDB:
     W = get_matrix(cfg, params, mod).astype(jnp.float32)
-    H = build_hessian(h_raw, damp)
-    Hinv = jnp.linalg.inv(H)
     levels = level_grid(mod)
-    n_remove = max(levels)
     prune = prune_structured_compact if compact else prune_structured
-    res = prune(W, Hinv, group_size=mod.group_size,
-                n_remove=n_remove, levels=tuple(levels))
+    snaps16, errs, orders = _prune_healed(
+        prune, W, h_raw, group_size=mod.group_size,
+        n_remove=max(levels), levels=tuple(levels), use_kernel=False,
+        damp=damp)
     base = float(module_drop_error(W, h_raw))
-    return _finish_module_db(mod, np.asarray(levels),
-                             np.asarray(res.snapshots, np.float16),
-                             np.asarray(res.errors), base,
-                             np.asarray(res.order))
+    return _finish_module_db(mod, np.asarray(levels), snaps16, errs,
+                             base, orders)
 
 
 def group_modules(cfg, params, mods: List[PrunableModule]
@@ -129,16 +188,14 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
                                 .astype(jnp.float32) for m in chunk])
                 Hraw = jnp.stack([jnp.asarray(hessians[m.name],
                                               jnp.float32) for m in chunk])
-                H = build_hessian(Hraw, damp)
-                Hinv = jnp.linalg.inv(H)
-                res = prune_batched(
-                    Ws, Hinv, group_size=gs, n_remove=max(levels),
-                    levels=levels, use_kernel=use_kernel)
+                # one host transfer per chunk (float16), not per module;
+                # _prune_healed retries the chunk up the damping ladder
+                # (and without the kernel) on non-finite results
+                snaps16, errs, orders = _prune_healed(
+                    prune_batched, Ws, Hraw, group_size=gs,
+                    n_remove=max(levels), levels=levels,
+                    use_kernel=use_kernel, damp=damp)
                 bases = module_drop_errors(Ws, Hraw)
-                # one host transfer per chunk (float16), not per module
-                snaps16 = np.asarray(res.snapshots.astype(jnp.float16))
-                errs = np.asarray(res.errors)
-                orders = np.asarray(res.order)
                 bases = np.asarray(bases, np.float64)
                 lv = np.asarray(levels)
                 for i, m in enumerate(chunk):

@@ -18,6 +18,16 @@ into replicated per-module Hessians. Still one jitted, buffer-donated
 call per batch; the single-device path is kept verbatim as the
 equivalence reference (tests/test_sharded_calibration.py asserts fp32
 agreement and identical pruning orders).
+
+Numerical self-healing: every batch carries a finite sentinel — if any
+captured activation of the batch is non-finite (a poisoned batch, or an
+injected ``calib.batch`` fault via the robustness layer's poison
+scalar), the whole batch's update is skipped for *all* modules
+(``jnp.where(ok, new, old)``) and counted, so the result equals a clean
+run over the remaining batches exactly — pruning-order equivalence is
+asserted in tests/test_faults.py.  A fault-free run is bit-identical:
+the poison scalar is exactly 1.0 (IEEE multiplicative identity) and a
+true-predicate select returns the updated value unchanged.
 """
 from __future__ import annotations
 
@@ -34,6 +44,8 @@ from ..distributed.activation import activation_context, \
     get_activation_context
 from ..distributed.sharding import axis_size, data_axes_for
 from ..models.transformer import forward
+from ..robustness import faults as _faults
+from ..robustness.report import current_report
 from .structures import PrunableModule, get_capture, registry
 
 
@@ -64,19 +76,29 @@ def _fused_step(cfg, use_kernel: bool):
     collect_hessians per target and must not re-trace the forward."""
     mods = registry(cfg)
 
-    def _step(hessians, counts, params, tokens, frontend):
+    def _step(hessians, counts, params, tokens, frontend, poison):
         caps = forward(cfg, params, tokens, frontend_embeds=frontend,
                        capture=True)["captures"]
+        # batch-level finite sentinel: poison is exactly 1.0 on the clean
+        # path (bit-exact identity); any non-finite capture anywhere in
+        # the batch skips the whole batch's update for every module
+        xs, ok = {}, jnp.bool_(True)
+        for mod in mods:
+            x, valid = get_capture(caps, mod)
+            x = x * poison
+            ok &= jnp.all(jnp.isfinite(x))
+            xs[mod.name] = (x, valid)
         new_h: Dict[str, jnp.ndarray] = {}
         new_c: Dict[str, jnp.ndarray] = {}
         for mod in mods:
-            x, valid = get_capture(caps, mod)
-            new_h[mod.name] = xtx(x, valid, use_kernel=use_kernel,
-                                  acc=hessians[mod.name])
+            x, valid = xs[mod.name]
+            h_upd = xtx(x, valid, use_kernel=use_kernel,
+                        acc=hessians[mod.name])
+            new_h[mod.name] = jnp.where(ok, h_upd, hessians[mod.name])
             n = (jnp.float32(x.shape[0]) if valid is None
                  else jnp.sum(valid).astype(jnp.float32))
-            new_c[mod.name] = counts[mod.name] + n
-        return new_h, new_c
+            new_c[mod.name] = counts[mod.name] + jnp.where(ok, n, 0.0)
+        return new_h, new_c, ok
 
     return jax.jit(_step, donate_argnums=_donate())
 
@@ -89,24 +111,37 @@ def _fused_step_sharded(cfg, use_kernel: bool, mesh, data_axes: Tuple[str]):
     mods = registry(cfg)
     batch_spec = P(data_axes)
 
-    def _step(hessians, counts, params, tokens, frontend):
+    def _step(hessians, counts, params, tokens, frontend, poison):
         caps = forward(cfg, params, tokens, frontend_embeds=frontend,
                        capture=True)["captures"]
+        # batch-global sentinel: a batch is skipped on EVERY device if
+        # any shard saw a non-finite capture (psum of per-shard bad
+        # flags), keeping the skip decision identical to the
+        # single-device reference path
+        xs, ok = {}, jnp.bool_(True)
+        for mod in mods:
+            x, valid = get_capture(caps, mod)
+            x = x * poison
+            ok &= jnp.all(jnp.isfinite(x))
+            xs[mod.name] = (x, valid)
+        bad = jax.lax.psum(1.0 - ok.astype(jnp.float32), data_axes)
+        ok = bad == 0.0
         new_h: Dict[str, jnp.ndarray] = {}
         new_c: Dict[str, jnp.ndarray] = {}
         for mod in mods:
-            x, valid = get_capture(caps, mod)
+            x, valid = xs[mod.name]
             part = xtx(x, valid, use_kernel=use_kernel)
             n = (jnp.float32(x.shape[0]) if valid is None
                  else jnp.sum(valid).astype(jnp.float32))
             new_h[mod.name] = hessians[mod.name] \
-                + jax.lax.psum(part, data_axes)
-            new_c[mod.name] = counts[mod.name] + jax.lax.psum(n, data_axes)
-        return new_h, new_c
+                + jnp.where(ok, jax.lax.psum(part, data_axes), 0.0)
+            new_c[mod.name] = counts[mod.name] \
+                + jnp.where(ok, jax.lax.psum(n, data_axes), 0.0)
+        return new_h, new_c, ok
 
     f = shard_map(_step, mesh=mesh,
-                  in_specs=(P(), P(), P(), batch_spec, batch_spec),
-                  out_specs=(P(), P()), check_rep=False)
+                  in_specs=(P(), P(), P(), batch_spec, batch_spec, P()),
+                  out_specs=(P(), P(), P()), check_rep=False)
     return jax.jit(f, donate_argnums=_donate())
 
 
@@ -147,6 +182,7 @@ def collect_hessians(cfg, params, batches: List[Dict], *,
     hessians = {m.name: jnp.zeros((m.d_in, m.d_in), jnp.float32)
                 for m in mods}
     counts = {m.name: jnp.zeros((), jnp.float32) for m in mods}
+    flags = []  # per-batch finite sentinels (device; fetched once at end)
     if sharded:
         step = _fused_step_sharded(cfg, use_kernel, mesh, data_axes)
         rep = NamedSharding(mesh, P())
@@ -162,12 +198,34 @@ def collect_hessians(cfg, params, batches: List[Dict], *,
                 tokens = jax.device_put(batch["tokens"], dp)
                 fe = batch.get("frontend")
                 fe = jax.device_put(fe, dp) if fe is not None else None
-                hessians, counts = step(hessians, counts, params, tokens, fe)
+                poison = jnp.float32(_faults.poison_scalar("calib.batch"))
+                hessians, counts, ok = step(hessians, counts, params,
+                                            tokens, fe, poison)
+                flags.append(ok)
     else:
         step = _fused_step(cfg, use_kernel)
         for batch in batches:
-            hessians, counts = step(hessians, counts, params,
-                                    batch["tokens"], batch.get("frontend"))
+            poison = jnp.float32(_faults.poison_scalar("calib.batch"))
+            hessians, counts, ok = step(hessians, counts, params,
+                                        batch["tokens"],
+                                        batch.get("frontend"), poison)
+            flags.append(ok)
+
+    # surface skipped (poisoned) batches: the accumulators already hold
+    # exactly the clean batches' sums, equal to a clean run minus the
+    # skipped batches
+    flags = [bool(f) for f in jax.device_get(flags)]
+    skipped = flags.count(False)
+    if skipped:
+        rep = current_report()
+        rep.count("detected", "calib.batch", skipped)
+        rep.count("recovered", "calib.batch", skipped)
+        print(f"[robustness] calib: skipped {skipped}/{len(batches)} "
+              f"non-finite calibration batch(es)")
+    if skipped == len(batches):
+        raise FloatingPointError(
+            "every calibration batch produced non-finite activations — "
+            "no Hessian could be accumulated")
 
     # normalize by sample count (keeps damping scale-invariant)
     counts = jax.device_get(counts)

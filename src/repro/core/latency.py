@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..robustness import faults as _faults
+from ..robustness.report import current_report
 from ..runtime import costmodel as cm
 from .structures import PrunableModule, level_grid, registry
 
@@ -119,8 +121,13 @@ def build_costmodel_table(cfg, env: cm.InferenceEnv) -> LatencyTable:
 # ----------------------------------------------------------------------
 
 # observable measurement-effort counters: a latency-cache hit must perform
-# zero timing work (tests/test_latency_cache.py asserts on the deltas)
-TIMING_STATS = {"calls": 0, "reps": 0}
+# zero timing work (tests/test_latency_cache.py asserts on the deltas).
+# cache_corrupt / cache_foreign / cache_flagged are quarantine telemetry:
+# unparseable-or-hash-mismatched vs wrong-key/wrong-version cache files
+# seen by LatencyCache.get, with the offending basenames named
+TIMING_STATS = {"calls": 0, "reps": 0,
+                "cache_corrupt": 0, "cache_foreign": 0,
+                "cache_flagged": []}
 
 
 def _attn_timing_module(cfg, env: cm.InferenceEnv, groups: int, key, dt):
@@ -158,6 +165,7 @@ def _attn_timing_module(cfg, env: cm.InferenceEnv, groups: int, key, dt):
 
 
 def _time_fn(fn, *args, reps: int = 5) -> float:
+    _faults.hit("latency.measure")  # injected timing failure/delay point
     TIMING_STATS["calls"] += 1
     TIMING_STATS["reps"] += reps
     jax.block_until_ready(fn(*args))  # compile + warm
@@ -235,17 +243,34 @@ def build_table(cfg, env: cm.InferenceEnv, backend: str = "costmodel",
     ``$ZIPLM_LATENCY_CACHE`` is set (opt-in keeps bare runs hermetic);
     ``refresh=True`` forces a re-measure and overwrites the cached entry.
     The analytic ``costmodel`` backend is cheap and never cached.
+
+    Degradation ladder: a measurement failure (or timeout injected at the
+    ``latency.measure`` fault site) trips the per-site breaker, the cached
+    entry for this key (if any) is quarantined, and the call — plus every
+    later ``measure`` call while the breaker is open — is served by the
+    analytic roofline backend instead of crashing the run.
     """
     if backend == "costmodel":
         return build_costmodel_table(cfg, env)
     if backend == "measure":
-        if cache_dir is None and not os.environ.get("ZIPLM_LATENCY_CACHE"):
-            return build_measured_table(cfg, env, **kw)
-        from .latency_cache import LatencyCache
-        lc = LatencyCache(cache_dir)
-        tab = None if refresh else lc.get(cfg, env, **kw)
-        if tab is None:
+        rep = current_report()
+        if rep.breaker_open("latency.measure"):
+            return build_costmodel_table(cfg, env)
+        lc = None
+        if cache_dir is not None or os.environ.get("ZIPLM_LATENCY_CACHE"):
+            from .latency_cache import LatencyCache
+            lc = LatencyCache(cache_dir)
+            tab = None if refresh else lc.get(cfg, env, **kw)
+            if tab is not None:
+                return tab
+        try:
             tab = build_measured_table(cfg, env, **kw)
+        except Exception as e:
+            rep.trip("latency.measure", reason=f"measurement failed: {e!r}")
+            if lc is not None:
+                lc.quarantine(cfg, env, **kw)
+            return build_costmodel_table(cfg, env)
+        if lc is not None:
             lc.put(cfg, env, tab, **kw)
         return tab
     raise ValueError(f"unknown latency backend {backend!r}")

@@ -151,14 +151,34 @@ class LatencyCache:
     # ------------------------------------------------------------------
     def get(self, cfg, env: cm.InferenceEnv,
             **measure_kw) -> Optional[LatencyTable]:
-        """The cached table for exactly this setup, or None (miss)."""
+        """The cached table for exactly this setup, or None (miss).
+
+        Miss telemetry: a file that exists but is unparseable or fails
+        its payload hash counts as ``cache_corrupt`` in
+        ``latency.TIMING_STATS``; a parseable file whose format_version
+        or key does not match counts as ``cache_foreign``; both append
+        the basename to ``cache_flagged``.  The file itself is left in
+        place (``put`` atomically overwrites it after the re-measure) —
+        renames happen only through :meth:`quarantine`.
+        """
         key = cache_key(cfg, env, measure_kw)
-        rec = load_json(self._path(key))
-        if (rec is None
-                or rec.get("format_version") != FORMAT_VERSION
-                or rec.get("key") != key
-                or rec.get("payload_sha256") != hashlib.sha256(
-                    _canon(rec.get("payload", {})).encode()).hexdigest()):
+        path = self._path(key)
+        rec = load_json(path)
+        flag = None
+        if rec is None:
+            if os.path.exists(path):
+                flag = "corrupt"  # present but unreadable/unparseable
+        elif (rec.get("format_version") != FORMAT_VERSION
+                or rec.get("key") != key):
+            flag = "foreign"  # stale schema or copied between setups
+        elif rec.get("payload_sha256") != hashlib.sha256(
+                _canon(rec.get("payload", {})).encode()).hexdigest():
+            flag = "corrupt"  # bit-rot / truncation / hand-edit
+        if rec is None or flag is not None:
+            if flag is not None:
+                from .latency import TIMING_STATS
+                TIMING_STATS[f"cache_{flag}"] += 1
+                TIMING_STATS["cache_flagged"].append(os.path.basename(path))
             self.stats.misses += 1
             return None
         payload = rec["payload"]
@@ -182,3 +202,16 @@ class LatencyCache:
         atomic_write_json(path, rec)
         self.stats.puts += 1
         return path
+
+    def quarantine(self, cfg, env: cm.InferenceEnv,
+                   **measure_kw) -> Optional[str]:
+        """Rename this key's cache file to ``*.corrupt`` and record it on
+        the ambient RobustnessReport (measure-failure demotion path: an
+        entry implicated in a failed measurement must not be served
+        again).  Returns the quarantine path, or None if there was no
+        file / the rename failed."""
+        from ..robustness.integrity import quarantine_file
+        path = self._path(cache_key(cfg, env, measure_kw))
+        if not os.path.exists(path):
+            return None
+        return quarantine_file(path, site="latency.measure")

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import loss_fn
+from ..robustness import faults as _faults
 from ..runtime.costmodel import InferenceEnv
 from .database import (ModuleDB, SnapshotCache, apply_assignment,
                        build_database)
@@ -117,6 +118,8 @@ def make_batched_eval(cfg, params, cache: SnapshotCache, batches,
                                        cache.batch_axes(params))
 
     def eval_batched(assignments: List[Dict[str, int]]) -> np.ndarray:
+        # injected OOM/failure point for the spdy degradation ladder
+        _faults.hit("spdy.batched_eval")
         n = len(assignments)
         out = np.empty((n,), np.float64)
         for lo in range(0, n, chunk):

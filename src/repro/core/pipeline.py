@@ -56,6 +56,25 @@ stage's artifact is durably persisted; ``(target_idx, "finetune", step)``
 kills mid-finetune after ``step`` trainer steps (the trainer's own
 ``stop_after``), leaving whatever checkpoints ``ckpt_every`` produced.
 Both raise :class:`FamilyPreempted`.
+
+Artifact integrity (robustness layer)
+-------------------------------------
+Every stage artifact's sha256 is recorded in its manifest payload at
+write time (``hessians_sha256`` / ``db_sha256`` / ``params_sha256``;
+writes go through the ``db.artifact_write`` fault site with bounded
+retry on transient OSErrors). On resume each artifact is re-hashed
+before use: a corrupt/truncated file is renamed ``*.corrupt``
+(quarantined, never deleted — the bytes are the bug report) and the
+owning stage re-executes from its still-valid inputs; with a
+deterministic setup the rebuilt artifact is bit-identical to the lost
+one. A corrupt final ``params.npz`` rolls its target back to the
+``search`` stage, where the recorded search result plus the trainer's
+own checkpoints repair it. The run's
+:class:`~repro.robustness.report.RobustnessReport` (injected/detected/
+recovered counts, circuit-breaker demotions, retries, quarantined
+paths) is dumped into the manifest under ``"robustness"`` even when
+the run is preempted or crashes mid-stage. A fault-free run under
+this layer is bit-identical to one without it.
 """
 from __future__ import annotations
 
@@ -74,6 +93,11 @@ from ..checkpoint.manager import (atomic_save_npz, atomic_write_json,
                                   load_json, restore_pytree, save_pytree)
 from ..configs.base import MeshConfig, TrainConfig
 from ..models.pruned import PrunedModel
+from ..robustness import faults as _faults
+from ..robustness.healing import retry_io
+from ..robustness.integrity import (checked_npz_load, file_sha256,
+                                    quarantine_file)
+from ..robustness.report import RobustnessReport, report_scope
 from ..train.trainer import Trainer
 from .database import (ModuleDB, SnapshotCache, apply_assignment,
                        build_database)
@@ -215,9 +239,17 @@ class FamilyRunState:
     def record(self, tkey: str, stage: str, executed: bool = True,
                **payload):
         """Mark ``stage`` complete for ``tkey``; ``executed`` logs a
-        stage-execution event (False when an artifact was merely loaded)."""
+        stage-execution event (False when an artifact was merely loaded).
+
+        Never regresses the stage pointer: rebuilding an early artifact
+        (a quarantined ``db.npz`` under a target already at ``search`` or
+        ``done``) refreshes its payload/sha without undoing the later
+        stages — deliberate rollbacks write ``entry["stage"]``
+        directly."""
         e = self.entry(tkey)
-        e["stage"] = stage
+        if (e["stage"] == "pending"
+                or STAGES.index(stage) >= STAGES.index(e["stage"])):
+            e["stage"] = stage
         e.update(payload)
         if executed:
             self.doc["executed"].append(
@@ -240,30 +272,51 @@ class FamilyRunState:
 # stage artifacts
 # ----------------------------------------------------------------------
 
-def _save_hessians(path: str, hessians: Dict[str, jnp.ndarray]):
-    atomic_save_npz(path, {k: np.asarray(v) for k, v in hessians.items()})
+def _save_artifact(path: str, arrays: Dict[str, np.ndarray]) -> str:
+    """Atomic npz write through the ``db.artifact_write`` fault site:
+    transient OSErrors retry with backoff; an injected corrupt-mode fault
+    flips bytes *after* the write, so the sha recorded in the manifest
+    catches it on the next load (the chaos scenario under test).
+    Returns the written file's sha256."""
+    sha, rule = retry_io(lambda: atomic_save_npz(path, arrays),
+                         site="db.artifact_write")
+    if rule is not None and rule.mode == "corrupt":
+        plan = _faults.active_plan()
+        _faults.corrupt_bytes(path, seed=plan.seed if plan else 0)
+    return sha
 
 
-def _load_hessians(path: str) -> Dict[str, jnp.ndarray]:
-    data = np.load(path)
-    return {k: jnp.asarray(data[k]) for k in data.files}
+def _save_hessians(path: str, hessians: Dict[str, jnp.ndarray]) -> str:
+    return _save_artifact(
+        path, {k: np.asarray(v) for k, v in hessians.items()})
+
+
+def _load_hessians(path: str, expected_sha: Optional[str] = None
+                   ) -> Optional[Dict[str, jnp.ndarray]]:
+    data = checked_npz_load(path, expected_sha, site="db.artifact_write")
+    if data is None:
+        return None
+    return {k: jnp.asarray(v) for k, v in data.items()}
 
 
 _DB_FIELDS = ("snapshots", "errors", "priors", "levels", "order")
 
 
-def _save_db(path: str, db: Dict[str, ModuleDB]):
+def _save_db(path: str, db: Dict[str, ModuleDB]) -> str:
     arrs = {}
     for name, mdb in db.items():
         for f in _DB_FIELDS:
             arrs[f"{name}::{f}"] = np.asarray(getattr(mdb, f))
         arrs[f"{name}::base_norm"] = np.float64(mdb.base_norm)
-    atomic_save_npz(path, arrs)
+    return _save_artifact(path, arrs)
 
 
-def _load_db(cfg, path: str) -> Dict[str, ModuleDB]:
-    data = np.load(path)
-    present = {k.split("::")[0] for k in data.files}
+def _load_db(cfg, path: str, expected_sha: Optional[str] = None
+             ) -> Optional[Dict[str, ModuleDB]]:
+    data = checked_npz_load(path, expected_sha, site="db.artifact_write")
+    if data is None:
+        return None
+    present = {k.split("::")[0] for k in data}
     out = {}
     # registry order, NOT sorted: SPDY's module ordering (and with it the
     # per-module RNG stream alignment) follows db insertion order, and
@@ -315,6 +368,7 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                   ckpt_every: Optional[int] = None,
                   seed: int = 0, resume: bool = True,
                   stop_after: Optional[tuple] = None,
+                  report: Optional[RobustnessReport] = None,
                   verbose: bool = False) -> List[GradualVariant]:
     """Stage-checkpointed gradual family pruning (module docstring has the
     manifest/resume contract).
@@ -339,6 +393,12 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
     family cannot share one search pass here because every target
     re-calibrates on the just-finetuned model, but per-target RNG streams
     are still fold-in derived from ``seed``.
+
+    ``report`` supplies the run's :class:`RobustnessReport` (a fresh one
+    is created otherwise); it is installed as the ambient report for the
+    whole run — every layer's fault detections, recoveries, and breaker
+    demotions accumulate there — and its dict dump lands in the manifest
+    under ``"robustness"``, preempted runs included.
     """
     tcfg = tcfg or TrainConfig(learning_rate=8e-5, warmup_steps=5,
                                total_steps=finetune_steps,
@@ -375,7 +435,32 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                          "tcfg": dataclasses.asdict(tcfg),
                          "latency": [latency_backend, lat_kw]}}
     frs = FamilyRunState(run_dir, header)
+    rep = report if report is not None else RobustnessReport()
+    try:
+        with report_scope(rep):
+            return _family_engine(
+                cfg, params, env, targets, data, calib_batches, tcfg=tcfg,
+                finetune_steps=finetune_steps, search_steps=search_steps,
+                search_pop=search_pop, search_batched=search_batched,
+                latency_backend=latency_backend, latency_kw=latency_kw,
+                mesh=mesh, data_axes=data_axes, mc=mc, specs=specs,
+                ckpt_every=ckpt_every, seed=seed, stop_after=stop_after,
+                verbose=verbose, run_dir=run_dir, frs=frs)
+    finally:
+        # the run's robustness telemetry rides in the manifest even when
+        # the run was preempted or crashed mid-stage
+        frs.doc["robustness"] = rep.as_dict()
+        frs._save()
 
+
+def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
+                   finetune_steps, search_steps, search_pop, search_batched,
+                   latency_backend, latency_kw, mesh, data_axes, mc, specs,
+                   ckpt_every, seed, stop_after, verbose, run_dir,
+                   frs) -> List[GradualVariant]:
+    """The family loop proper, run under an installed report scope
+    (``gradual_prune`` is the argument-validating, manifest-owning
+    wrapper)."""
     teacher = jax.tree.map(lambda a: a, params)  # dense teacher
     table = build_table(cfg, env, backend=latency_backend,
                         **(latency_kw or {}))
@@ -402,6 +487,35 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
     out: List[GradualVariant] = []
     seeds = np.random.SeedSequence(seed).spawn(len(targets))
     loss_b = None  # one compiled batched loss for the whole family
+
+    def load_or_build_db(i, tkey, tdir, entry):
+        """Sha-verified db load with fall-through rebuild: a corrupt
+        (quarantined) or missing ``db.npz`` re-executes the db stage from
+        the hessians artifact; a corrupt hessians artifact likewise falls
+        back to re-collection on the current model — bit-identical to the
+        original build with a deterministic setup.  Hessians stay
+        unloaded when the db artifact is valid (dead weight)."""
+        dpath = os.path.join(tdir, "db.npz")
+        if frs.stage_done(tkey, "db"):
+            db = _load_db(cfg, dpath, expected_sha=entry.get("db_sha256"))
+            if db is not None:
+                return db
+        hpath = os.path.join(tdir, "hessians.npz")
+        hessians = None
+        if frs.stage_done(tkey, "hessians"):
+            hessians = _load_hessians(
+                hpath, expected_sha=entry.get("hessians_sha256"))
+        if hessians is None:
+            hessians = collect_hessians(cfg, current, calib_batches,
+                                        mesh=mesh, data_axes=data_axes)
+            frs.record(tkey, "hessians",
+                       hessians_sha256=_save_hessians(hpath, hessians))
+            preempt_at(i, "hessians")
+        db = build_database(cfg, current, hessians)
+        frs.record(tkey, "db", db_sha256=_save_db(dpath, db))
+        preempt_at(i, "db")
+        return db
+
     for i, target in enumerate(targets):
         tkey = _tkey(target)
         tdir = os.path.join(run_dir, f"t{tkey}")
@@ -412,45 +526,39 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
             # no Hessians, no DB build, no search, no finetune. The final
             # params ride in their own params.npz (written at completion)
             # so this path never pays for restoring optimizer/EF state.
-            db = _load_db(cfg, os.path.join(tdir, "db.npz"))
-            res = _result_from(entry)
             ppath = os.path.join(tdir, "params.npz")
             if not os.path.exists(ppath):
                 raise RuntimeError(
                     f"manifest says target {target} is done but its final "
                     f"params artifact is missing ({ppath})")
-            current = restore_pytree(current, ppath)
-            pm = shrink(cfg, current, db, res.assignment)
-            out.append(GradualVariant(
-                target=target, achieved=res.speedup,
-                assignment=res.assignment, params=current, pruned=pm,
-                loss_before_ft=float(entry["loss_before_ft"]),
-                loss_after_ft=float(entry["loss_after_ft"])))
-            if verbose:
-                print(f"[gradual] {target}x restored (stage done)")
-            continue
+            want = entry.get("params_sha256")
+            if want is not None and file_sha256(ppath) != want:
+                # final params rotted on disk: quarantine them and roll
+                # this target back to its search stage — the recorded
+                # search result plus the trainer's own checkpoints
+                # repair it below (deliberate stage regression, written
+                # directly because record() never regresses)
+                quarantine_file(ppath, site="db.artifact_write")
+                entry["stage"] = "search"
+                frs._save()
+            else:
+                db = load_or_build_db(i, tkey, tdir, entry)
+                res = _result_from(entry)
+                current = restore_pytree(current, ppath)
+                pm = shrink(cfg, current, db, res.assignment)
+                out.append(GradualVariant(
+                    target=target, achieved=res.speedup,
+                    assignment=res.assignment, params=current, pruned=pm,
+                    loss_before_ft=float(entry["loss_before_ft"]),
+                    loss_after_ft=float(entry["loss_after_ft"])))
+                if verbose:
+                    print(f"[gradual] {target}x restored (stage done)")
+                continue
 
         # ---- stages: hessians (re-calibrate on the *current* model —
-        # Hessians drift as we prune) + database. With the DB artifact
-        # already on disk the Hessians are dead weight, so they are
-        # neither recomputed nor reloaded. ----
-        dpath = os.path.join(tdir, "db.npz")
-        if frs.stage_done(tkey, "db"):
-            db = _load_db(cfg, dpath)
-        else:
-            hpath = os.path.join(tdir, "hessians.npz")
-            if frs.stage_done(tkey, "hessians"):
-                hessians = _load_hessians(hpath)
-            else:
-                hessians = collect_hessians(cfg, current, calib_batches,
-                                            mesh=mesh, data_axes=data_axes)
-                _save_hessians(hpath, hessians)
-                frs.record(tkey, "hessians")
-                preempt_at(i, "hessians")
-            db = build_database(cfg, current, hessians)
-            _save_db(dpath, db)
-            frs.record(tkey, "db")
-            preempt_at(i, "db")
+        # Hessians drift as we prune) + database, both sha-verified with
+        # quarantine-and-rebuild on corruption. ----
+        db = load_or_build_db(i, tkey, tdir, entry)
         cache = SnapshotCache(cfg, db)
 
         # ---- stage: SPDY search ----
@@ -501,8 +609,9 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                 f"{int(state.step)} (run dir {run_dir})")
         current = state.params
         loss_after = loss_eval(current)
-        save_pytree(current, os.path.join(tdir, "params.npz"))
-        frs.record(tkey, "done", executed=False, loss_after_ft=loss_after)
+        psha = save_pytree(current, os.path.join(tdir, "params.npz"))
+        frs.record(tkey, "done", executed=False, loss_after_ft=loss_after,
+                   params_sha256=psha)
 
         pm = shrink(cfg, current, db, res.assignment)
         out.append(GradualVariant(

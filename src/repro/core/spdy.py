@@ -41,6 +41,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from ..robustness.report import current_report
 from .database import ModuleDB
 from .latency import LatencyTable
 
@@ -300,14 +301,28 @@ def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
             if analytic:
                 vals = [float(sum(p[c] ** 2 for p, c in zip(priors, key)))
                         for key in new_keys]
-            elif batched and eval_batched is not None:
-                vals = np.asarray(
-                    eval_batched([assemble(key) for key in new_keys]),
-                    np.float64)
             else:
-                fn = eval_fn if eval_fn is not None else \
-                    (lambda a: float(eval_batched([a])[0]))
-                vals = [float(fn(assemble(key))) for key in new_keys]
+                # degradation ladder: a batched stitch/eval failure (OOM,
+                # injected spdy.batched_eval fault) trips the breaker and
+                # this round — and every later one — falls back to the
+                # serial per-candidate reference path; same memo, same
+                # acceptance stream, just slower
+                vals = None
+                rep = current_report()
+                if (batched and eval_batched is not None
+                        and not rep.breaker_open("spdy.batched_eval")):
+                    try:
+                        vals = np.asarray(
+                            eval_batched([assemble(key)
+                                          for key in new_keys]),
+                            np.float64)
+                    except Exception as e:
+                        rep.trip("spdy.batched_eval",
+                                 reason=f"batched eval failed: {e!r}")
+                if vals is None:
+                    fn = eval_fn if eval_fn is not None else \
+                        (lambda a: float(eval_batched([a])[0]))
+                    vals = [float(fn(assemble(key))) for key in new_keys]
             for key, v in zip(new_keys, vals):
                 memo[key] = float(v)
             n_evals += len(new_keys)

@@ -26,7 +26,10 @@ def run_forced_devices(script: str, n_devices: int, *,
 
     The child's ``XLA_FLAGS`` is overwritten (the forced count must win),
     ``PYTHONPATH`` is prepended to, not replaced. Raises RuntimeError
-    with stdout/stderr tails on a non-zero exit or a missing RESULT line.
+    with stdout/stderr tails on a non-zero exit, a missing RESULT line,
+    or a timeout — the timeout case includes whatever partial output the
+    child produced before the kill (a bare TimeoutExpired hid the
+    hung child's last prints, which are exactly the debugging signal).
     """
     preamble = ("import os\n"
                 "os.environ['XLA_FLAGS'] = "
@@ -34,8 +37,18 @@ def run_forced_devices(script: str, n_devices: int, *,
     env = dict(os.environ)
     env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "") \
         if env.get("PYTHONPATH") else _SRC
-    r = subprocess.run([sys.executable, "-c", preamble + script], env=env,
-                       capture_output=True, text=True, timeout=timeout)
+    try:
+        r = subprocess.run([sys.executable, "-c", preamble + script],
+                           env=env, capture_output=True, text=True,
+                           timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        def _txt(b):
+            return (b.decode(errors="replace") if isinstance(b, bytes)
+                    else (b or ""))
+        tail = _txt(e.stdout)[-3000:] + _txt(e.stderr)[-3000:]
+        raise RuntimeError(
+            f"forced-device subprocess timed out after {timeout}s; "
+            f"partial output:\n{tail or '<none captured>'}") from e
     tail = r.stdout[-3000:] + r.stderr[-3000:]
     if r.returncode != 0:
         raise RuntimeError(f"forced-device subprocess failed "

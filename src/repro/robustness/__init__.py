@@ -1,0 +1,106 @@
+"""Chaos-hardening layer: deterministic fault injection, numerical
+self-healing, a graceful-degradation ladder, and artifact integrity.
+
+The bit-identity contract
+-------------------------
+A fault-free run under this layer is **bit-identical** to a run without
+it.  Every hook is engineered around that invariant:
+
+* calibration sentinels multiply captured activations by a poison scalar
+  that is exactly ``1.0`` when no fault fires (an IEEE-exact identity)
+  and select the updated Hessian with ``jnp.where(ok, new, old)`` — a
+  true-predicate select returns ``new`` unchanged;
+* the damping-escalation ladder's first rung is ``damp * 10**0`` — the
+  exact damp the un-hardened code used;
+* degradation fallbacks sit behind per-site circuit breakers that only
+  open after an observed failure;
+* artifact sha256 verification reads bytes that an intact artifact
+  reproduces exactly, and a verified load feeds the same ``np.load``
+  path as before.
+
+tier-1's equivalence suites assert the contract transitively (every
+pinned serial-vs-batched / resume-bit-identity test runs under the
+layer); tests/test_faults.py asserts it directly.
+
+Fault-injection sites
+---------------------
+======================  =================================================
+``calib.batch``         poison scalar folded into every captured
+                        activation of one calibration batch
+                        (``core.hessian.collect_hessians``)
+``obs.cholesky``        poison scalar folded into the inverse Hessian
+                        fed to Algorithm 1 (``core.database``)
+``db.artifact_write``   raise / transient-OSError / corrupt-after-write
+                        on family stage artifacts (``core.pipeline``)
+``ckpt.async_write``    same, on the async checkpoint worker
+                        (``checkpoint.manager``)
+``latency.measure``     raise / delay inside wall-clock module timing
+                        (``core.latency._time_fn``)
+``kernel.pallas``       raise at a Pallas-kernel call boundary
+                        (``kernels.ops``)
+``spdy.batched_eval``   raise inside the population-batched SPDY scorer
+                        (``core.oneshot.make_batched_eval``)
+======================  =================================================
+
+A :class:`FaultPlan` holds seeded Nth-hit rules per site.  Configure it
+in code (``with install(FaultPlan.parse("obs.cholesky:nan@0")): ...``)
+or from the environment / CLI::
+
+    ZIPLM_FAULTS="site:mode@nth[xCOUNT][~DELAY]" [ZIPLM_FAULT_SEED=s]
+
+e.g. ``ZIPLM_FAULTS="calib.batch:nan@1,ckpt.async_write:oserror@0x2"``
+injects NaN into the second calibration batch and fails the first two
+async checkpoint writes with a (retried) transient OSError.  All
+injection is deterministic — same plan, same call sequence, same faults
+— so any chaos failure reproduces bit-exactly from its spec string
+(``benchmarks/run.py --faults SPEC`` threads the same grammar).
+
+The graceful-degradation ladder
+-------------------------------
+Each rung demotes to a slower-but-safe path, once, behind a per-site
+circuit breaker (counted + logged once per site in the ambient
+:class:`RobustnessReport`):
+
+* Pallas kernel failure       -> ``kernels/ref`` jnp fallback
+  (``kernels.ops``), plus ``use_kernel=False`` retry of a failing
+  database chunk for device-side failures inside a traced loop;
+* measured-latency failure    -> analytic roofline (``costmodel``)
+  backend, with the cache entry quarantined (``core.latency``);
+* batched SPDY eval failure (e.g. OOM ``XlaRuntimeError``)
+                              -> serial per-candidate reference eval
+  with identical scores (``core.spdy.search_family``);
+* non-finite OBS prune result -> damping-escalation ladder
+  (``damp * 10**k``, bounded retries; ``core.database``);
+* poisoned calibration batch  -> skipped + counted, preserving
+  pruning-order equivalence with a clean run minus that batch;
+* trainer loss NaN/spike      -> skip step + reset the int8-EF
+  residual; after K consecutive bad steps reload the last checkpoint
+  (``train.trainer``).
+
+Artifact integrity: family stage artifacts and trainer checkpoints
+record their sha256 and verify it on load; corrupt files are renamed
+``*.corrupt`` (quarantined) and the owning stage re-executes.  Failed
+async checkpoint writes are retried with backoff and then surfaced as
+:class:`~repro.checkpoint.manager.CheckpointWriteError` from
+``wait()``/``close()``.
+
+A :class:`RobustnessReport` (faults injected/detected/recovered,
+demotions, retries, quarantined files) is ambient via
+:func:`report_scope`; ``gradual_prune(report=...)`` scopes one per
+family run and writes its summary into the ``family.json`` manifest.
+``benchmarks/run.py chaos`` records recovery overhead vs a clean run.
+"""
+from .faults import (FaultInjected, FaultIOError, FaultPlan, FaultRule,
+                     SITES, active_plan, corrupt_bytes, hit, install,
+                     poison_array, poison_scalar)
+from .healing import all_finite, damp_schedule, retry_io
+from .integrity import checked_npz_load, file_sha256, quarantine_file
+from .report import RobustnessReport, current_report, report_scope
+
+__all__ = [
+    "FaultInjected", "FaultIOError", "FaultPlan", "FaultRule", "SITES",
+    "RobustnessReport", "active_plan", "all_finite", "checked_npz_load",
+    "corrupt_bytes", "current_report", "damp_schedule", "file_sha256",
+    "hit", "install", "poison_array", "poison_scalar", "quarantine_file",
+    "report_scope", "retry_io",
+]

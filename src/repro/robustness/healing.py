@@ -1,0 +1,54 @@
+"""Self-healing primitives: bounded I/O retry with backoff, the damping
+escalation ladder, and finiteness checks.  Pure helpers — the sites that
+use them (checkpoint writes, stage artifacts, Algorithm 1) live with the
+code they heal."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from . import faults
+from .report import current_report
+
+
+def retry_io(fn: Callable[[], object], *, site: str, attempts: int = 3,
+             backoff_s: float = 0.05
+             ) -> Tuple[object, Optional["faults.FaultRule"]]:
+    """Run ``fn`` with bounded retry + exponential backoff on ``OSError``
+    (covering injected :class:`~repro.robustness.faults.FaultIOError`\\ s
+    — the fault site fires inside the retried region).
+
+    Returns ``(fn(), fired_rule)``; the rule lets callers apply
+    post-write modes (``corrupt``).  Re-raises the last ``OSError`` after
+    ``attempts`` failures, counted as detected."""
+    rep = current_report()
+    last: Optional[OSError] = None
+    for a in range(attempts):
+        try:
+            rule = faults.hit(site)
+            out = fn()
+            if a:
+                rep.count("recovered", site)
+            return out, rule
+        except OSError as e:
+            last = e
+            rep.count("retries", site)
+            if a < attempts - 1:
+                time.sleep(backoff_s * (2 ** a))
+    rep.count("detected", site)
+    raise last
+
+
+def damp_schedule(damp: float, retries: int = 4) -> List[float]:
+    """The percdamp escalation ladder: ``damp * 10**k``.  Rung 0 is
+    exactly the caller's damp (``x * 10**0 == x * 1.0`` bit-exactly), so
+    a run that never escalates is bit-identical to the un-laddered
+    code."""
+    return [damp * (10.0 ** k) for k in range(retries + 1)]
+
+
+def all_finite(*arrays) -> bool:
+    """True iff every element of every (host or device) array is finite."""
+    return all(bool(np.isfinite(np.asarray(a)).all()) for a in arrays)

@@ -1,0 +1,66 @@
+"""Artifact integrity: sha256 verification on load + quarantine.
+
+A stage artifact whose recorded sha256 (family manifest) no longer
+matches its bytes — or that fails to parse at all — is renamed
+``*.corrupt`` (never deleted: the bytes are the bug report) and the
+load returns None, which makes the owning stage re-execute instead of
+crashing mid-resume."""
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from .report import current_report
+
+
+def file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def quarantine_file(path: str, site: str = "artifact") -> Optional[str]:
+    """Rename ``path`` to a fresh ``*.corrupt[.N]`` sibling; returns the
+    quarantine path (None if the rename itself failed)."""
+    qpath = path + ".corrupt"
+    n = 0
+    while os.path.exists(qpath):
+        n += 1
+        qpath = f"{path}.corrupt.{n}"
+    try:
+        os.replace(path, qpath)
+    except OSError:
+        return None
+    rep = current_report()
+    rep.quarantine(qpath, site=site)
+    msg = f"[robustness] quarantined corrupt artifact {path} -> {qpath}"
+    rep.notes.append(msg)
+    print(msg)
+    return qpath
+
+
+def checked_npz_load(path: str, expected_sha: Optional[str] = None,
+                     site: str = "artifact") -> Optional[Dict]:
+    """Load an ``.npz`` artifact with integrity checks.
+
+    Returns ``{name: np.ndarray}`` fully materialized, or None when the
+    file is missing (plain miss, no quarantine), its sha256 does not
+    match ``expected_sha``, or it fails to parse — the latter two
+    quarantine the file.  ``expected_sha=None`` skips the hash check
+    (pre-robustness manifests) but still catches unparseable files."""
+    if not os.path.exists(path):
+        return None
+    if expected_sha is not None and file_sha256(path) != expected_sha:
+        quarantine_file(path, site=site)
+        return None
+    try:
+        with np.load(path) as data:
+            return {k: np.asarray(data[k]) for k in data.files}
+    except Exception:
+        quarantine_file(path, site=site)
+        return None

@@ -5,7 +5,17 @@
 * straggler watchdog: per-step wall time tracked, steps slower than
   ``straggler_factor`` x the running median are logged and counted — on a
   real pod this feeds the reschedule/hot-spare decision, here it is
-  observable state the tests assert on.
+  observable state the tests assert on;
+* loss guard (``nan_guard``, on by default): a non-finite loss — or,
+  with ``spike_factor > 0``, a loss above ``spike_factor`` x the running
+  median — skips the step (the state update is discarded) and resets the
+  int8 error-feedback residual, since EF accumulated under a corrupted
+  gradient would replay it into later steps.  After ``max_bad_steps``
+  consecutive bad steps the last checkpoint is reloaded; a second
+  reload with no intervening progress raises.  Guard events are counted
+  in ``self.guard`` and the ambient RobustnessReport.  The guard reads
+  the loss value fit() already syncs on, so a clean run is
+  bit-identical with the guard on or off.
 
 Mesh path: pass ``mesh`` (plus ``specs`` from ``model_init``; ``mc`` is
 derived from the mesh when omitted) and the trainer routes through
@@ -20,17 +30,20 @@ different mesh shape is the same code path.
 """
 from __future__ import annotations
 
+import math
 import signal
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import MeshConfig, TrainConfig
 from ..distributed.sharding import mesh_config_for, param_shardings
+from ..robustness.report import current_report
 from .train_step import (TrainState, jit_train_step, make_train_state,
                          make_train_step, state_shardings)
 
@@ -58,13 +71,22 @@ class Trainer:
                  teacher_params=None, masks=None, ckpt_every: int = 50,
                  keep: int = 3, step_fn=None, log_every: int = 10,
                  install_signal_handler: bool = False, mesh=None,
-                 mc: Optional[MeshConfig] = None, specs=None):
+                 mc: Optional[MeshConfig] = None, specs=None,
+                 nan_guard: bool = True, max_bad_steps: int = 3,
+                 spike_factor: float = 0.0):
         self.cfg = cfg
         self.tcfg = tcfg
         self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.watchdog = StragglerWatchdog()
+        self.nan_guard = nan_guard
+        self.max_bad_steps = max_bad_steps
+        self.spike_factor = spike_factor
+        self.guard = {"skipped": [], "reloads": 0}
+        self._bad_streak = 0
+        self._loss_hist: List[float] = []
+        self._reload_marker: Optional[int] = None
         self.mesh = mesh
         self.mc = mc if mc is not None or mesh is None \
             else mesh_config_for(mesh)
@@ -92,6 +114,23 @@ class Trainer:
 
     def _on_preempt(self, *_):
         self.preempted = True
+
+    # -- loss guard helpers -------------------------------------------------
+    def _loss_is_bad(self, loss: float) -> bool:
+        if not math.isfinite(loss):
+            return True
+        if self.spike_factor > 0 and len(self._loss_hist) >= 5:
+            return loss > self.spike_factor * float(
+                np.median(self._loss_hist))
+        return False
+
+    def _reset_ef(self, state: TrainState) -> TrainState:
+        """Zero the int8 error-feedback residual: EF accumulated under a
+        corrupted gradient would replay the corruption into later steps."""
+        if getattr(state, "ef_err", None) is None:
+            return state
+        return state._replace(
+            ef_err=jax.tree.map(jnp.zeros_like, state.ef_err))
 
     def init_or_restore(self, params) -> TrainState:
         state = make_train_state(self.cfg, params, self.tcfg,
@@ -122,9 +161,48 @@ class Trainer:
                     self.specs, batch, teacher_params=self.teacher_params,
                     masks=self.masks)
             t0 = time.perf_counter()
-            state, metrics = self.step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
+            new_state, metrics = self.step_fn(state, batch)
+            # float() syncs on the loss exactly like the old
+            # block_until_ready did — the guard reads a value the loop
+            # already pays for, so a clean run is bit-identical
+            loss = float(metrics["loss"])
             dt = time.perf_counter() - t0
+            if self.nan_guard and self._loss_is_bad(loss):
+                rep = current_report()
+                rep.count("detected", "train.step")
+                self._bad_streak += 1
+                self.guard["skipped"].append(done + 1)
+                print(f"[robustness] train: bad loss {loss!r} at step "
+                      f"{done + 1}; skipping (streak {self._bad_streak})")
+                if self._bad_streak >= self.max_bad_steps:
+                    if self._reload_marker == done:
+                        raise RuntimeError(
+                            f"training cannot progress past step {done}: "
+                            f"{self.max_bad_steps} consecutive bad steps "
+                            "again after a checkpoint reload")
+                    self._reload_marker = done
+                    restored = self.ckpt.restore(state,
+                                                 shardings=self._st_sh)
+                    state = (restored if restored is not None
+                             else self._reset_ef(state))
+                    self.guard["reloads"] += 1
+                    self._bad_streak = 0
+                    done = int(state.step)
+                    print(f"[robustness] train: {self.max_bad_steps} "
+                          f"consecutive bad steps; reloaded checkpoint "
+                          f"at step {done}")
+                else:
+                    # discard the update, keep the prior state with the
+                    # EF residual cleared
+                    state = self._reset_ef(state)
+                rep.count("recovered", "train.step")
+                continue
+            self._bad_streak = 0
+            if self.nan_guard:
+                self._loss_hist.append(loss)
+                if len(self._loss_hist) > 50:
+                    self._loss_hist.pop(0)
+            state = new_state
             done = int(state.step)
             self.watchdog.observe(done, dt)
             if done % self.log_every == 0 or done == steps:

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import (CheckpointManager, restore_pytree,
+from repro.checkpoint.manager import (CheckpointManager,
+                                      CheckpointWriteError, restore_pytree,
                                       save_pytree)
 from repro.configs.base import TrainConfig
 from repro.data import synthetic_stream
@@ -97,6 +98,68 @@ def test_mesh_agnostic_restore(tiny_cfg, tmp_path):
     shardings = jax.tree.map(lambda _: shard, state)
     r = restore_pytree(state, p, shardings)
     assert r.params["embed"]["table"].sharding == shard
+
+
+def test_async_write_failure_surfaces_at_wait(tmp_path, monkeypatch):
+    """Regression: the async worker appended write errors to
+    ``self._errors`` but nothing ever read them — a full disk (or any
+    persistent OSError) let the trainer 'checkpoint' every interval,
+    report success, and resume from a stale step.  wait() must raise."""
+    import repro.checkpoint.manager as M
+    real = M.atomic_save_npz
+    fail = {"on": True}
+
+    def _maybe_fail(path, arrays):
+        if fail["on"]:
+            raise OSError(28, "No space left on device", path)
+        return real(path, arrays)
+
+    monkeypatch.setattr(M, "atomic_save_npz", _maybe_fail)
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree())
+    with pytest.raises(CheckpointWriteError) as ei:
+        m.wait()
+    assert any(isinstance(e, OSError) for e in ei.value.errors)
+    # errors drained on raise: the manager is reusable afterwards
+    m.wait()
+    fail["on"] = False
+    m.save(2, _tree())
+    m.wait()
+    assert m.latest_step() == 2
+    m.close()
+
+
+def test_async_write_failure_surfaces_at_close(tmp_path, monkeypatch):
+    import repro.checkpoint.manager as M
+    monkeypatch.setattr(M, "atomic_save_npz",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError(5, "I/O error")))
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(7, _tree())
+    with pytest.raises(CheckpointWriteError):
+        m.close()
+
+
+def test_transient_write_error_heals(tmp_path, monkeypatch):
+    """One transient OSError then success: retry_io retries with backoff,
+    the checkpoint lands, and wait() stays silent."""
+    import repro.checkpoint.manager as M
+    real = M.atomic_save_npz
+    calls = {"n": 0}
+
+    def _flaky(path, arrays):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError(11, "Resource temporarily unavailable")
+        return real(path, arrays)
+
+    monkeypatch.setattr(M, "atomic_save_npz", _flaky)
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(3, _tree())
+    m.wait()  # must not raise
+    assert calls["n"] == 2
+    assert m.latest_step() == 3
+    m.close()
 
 
 def test_straggler_watchdog():

@@ -1,0 +1,488 @@
+"""Robustness layer: deterministic fault injection, numerical
+self-healing, the graceful-degradation ladder, and artifact integrity.
+
+Fast plan/report/retry unit tests run in tier 1; the end-to-end chaos
+scenarios (NaN calibration batches, corrupted stage artifacts, failed
+async checkpoint writes, breaker demotions, fault-free bit-identity)
+are ``@pytest.mark.chaos`` and run via ``pytest -m chaos``.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, CheckpointWriteError
+from repro.configs.base import TrainConfig
+from repro.core.database import build_database
+from repro.core.hessian import collect_hessians
+from repro.core.latency import build_costmodel_table, build_table
+from repro.core.pipeline import family_run_dir, gradual_prune
+from repro.core.spdy import search
+from repro.data import calibration_batches, synthetic_stream
+from repro.robustness import (FaultInjected, FaultIOError, FaultPlan,
+                              RobustnessReport, corrupt_bytes, hit, install,
+                              poison_array, poison_scalar, report_scope,
+                              retry_io)
+from repro.runtime.costmodel import InferenceEnv
+from repro.train.trainer import Trainer
+
+ENV = InferenceEnv(batch=8, seq=64, mode="prefill")
+FT_STEPS = 8
+TARGETS = [1.5, 2.0]
+
+
+# ----------------------------------------------------------------------
+# tier-1: plan / report / primitives
+# ----------------------------------------------------------------------
+
+def test_spec_grammar_roundtrip():
+    plan = FaultPlan.parse(
+        "calib.batch:nan@2x3, ckpt.async_write:oserror~0.2,"
+        "latency.measure:delay@1~0.01", seed=7)
+    assert plan.seed == 7
+    r0, r1, r2 = plan.rules
+    assert (r0.site, r0.mode, r0.nth, r0.count) == \
+        ("calib.batch", "nan", 2, 3)
+    assert (r1.site, r1.mode, r1.delay_s) == \
+        ("ckpt.async_write", "oserror", 0.2)
+    assert (r2.site, r2.mode, r2.nth, r2.delay_s) == \
+        ("latency.measure", "delay", 1, 0.01)
+
+
+def test_spec_rejects_unknown_site_and_mode():
+    with pytest.raises(ValueError, match="site"):
+        FaultPlan.parse("no.such.site:raise")
+    with pytest.raises(ValueError, match="mode"):
+        FaultPlan.parse("calib.batch:explode")
+    with pytest.raises(ValueError, match="grammar"):
+        FaultPlan.parse("calib.batch")
+
+
+def test_plan_from_env():
+    plan = FaultPlan.from_env({"ZIPLM_FAULTS": "obs.cholesky:nan@1",
+                               "ZIPLM_FAULT_SEED": "3"})
+    assert plan.seed == 3
+    assert plan.rules[0].site == "obs.cholesky"
+    assert FaultPlan.from_env({}) is None
+
+
+def test_nth_count_hit_semantics():
+    """A rule fires on hits [nth, nth+count) of its own site counter."""
+    with install(FaultPlan.parse("calib.batch:raise@1x2")):
+        fired = []
+        for i in range(5):
+            try:
+                hit("calib.batch")
+                fired.append(False)
+            except FaultInjected:
+                fired.append(True)
+        assert fired == [False, True, True, False, False]
+        hit("obs.cholesky")  # other sites keep independent counters
+    assert hit("calib.batch") is None  # plan uninstalled
+
+
+def test_hit_rejects_unknown_site_even_without_plan():
+    with pytest.raises(ValueError, match="site"):
+        hit("not.a.site")
+
+
+def test_oserror_mode_is_an_oserror():
+    with install(FaultPlan.parse("ckpt.async_write:oserror")):
+        with pytest.raises(OSError):
+            hit("ckpt.async_write")
+
+
+def test_poison_identity_when_clean():
+    """The clean path must be an exact no-op: scalar exactly 1.0, array
+    returned as the same object (same bits, no copy)."""
+    assert poison_scalar("calib.batch") == 1.0
+    x = jnp.arange(4.0)
+    assert poison_array("obs.cholesky", x) is x
+    with install(FaultPlan.parse("calib.batch:nan,obs.cholesky:inf")):
+        assert np.isnan(poison_scalar("calib.batch"))
+        assert np.isinf(np.asarray(poison_array("obs.cholesky", x))[1:]).all()
+
+
+def test_corrupt_bytes_deterministic(tmp_path):
+    p1, p2, p3 = (str(tmp_path / n) for n in ("a", "b", "c"))
+    payload = bytes(range(256)) * 8
+    for p in (p1, p2, p3):
+        with open(p, "wb") as f:
+            f.write(payload)
+    assert corrupt_bytes(p1, seed=5) and corrupt_bytes(p2, seed=5)
+    corrupt_bytes(p3, seed=6)
+    b1, b2, b3 = (open(p, "rb").read() for p in (p1, p2, p3))
+    assert b1 == b2 != payload          # same seed -> same flips
+    assert b3 != b1                     # different seed -> different flips
+
+
+def test_retry_io_heals_transient_and_surfaces_persistent():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise OSError(11, "try again")
+        return "ok"
+
+    with report_scope() as rep:
+        out, rule = retry_io(flaky, site="db.artifact_write")
+    assert out == "ok" and rule is None
+    assert rep.counts["retries"]["db.artifact_write"] == 1
+    assert rep.counts["recovered"]["db.artifact_write"] == 1
+
+    with report_scope() as rep:
+        with pytest.raises(OSError):
+            retry_io(lambda: (_ for _ in ()).throw(OSError(5, "dead")),
+                     site="db.artifact_write", attempts=2, backoff_s=0.0)
+    assert rep.counts["retries"]["db.artifact_write"] == 2
+    assert rep.counts["detected"]["db.artifact_write"] == 1
+
+
+def test_breaker_trips_and_logs_once(capsys):
+    rep = RobustnessReport()
+    assert not rep.breaker_open("kernel.pallas:ssd")
+    rep.trip("kernel.pallas:ssd", reason="boom")
+    rep.trip("kernel.pallas:ssd", reason="boom again")
+    assert rep.breaker_open("kernel.pallas:ssd")
+    assert rep.counts["demotions"]["kernel.pallas:ssd"] == 1
+    assert capsys.readouterr().out.count("demoted kernel.pallas:ssd") == 1
+    d = rep.as_dict()
+    assert d["breakers_open"] == ["kernel.pallas:ssd"]
+    assert d["counts"]["demotions"] == {"kernel.pallas:ssd": 1}
+
+
+def test_report_scope_nesting():
+    from repro.robustness import current_report
+    outer = current_report()
+    with report_scope() as rep:
+        assert current_report() is rep and rep is not outer
+        with report_scope(rep):
+            assert current_report() is rep
+    assert current_report() is outer
+
+
+# ----------------------------------------------------------------------
+# chaos tier: end-to-end scenarios
+# ----------------------------------------------------------------------
+
+def _kw(tiny_cfg):
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2,
+                       total_steps=FT_STEPS, distill_logit=1.0,
+                       distill_token=0.5)
+    return dict(tcfg=tcfg, finetune_steps=FT_STEPS, search_steps=4,
+                search_pop=4, ckpt_every=4)
+
+
+def _data(tiny_cfg):
+    return lambda step: synthetic_stream(tiny_cfg, 16, 64, seed=99,
+                                         start_step=step)
+
+
+def _run(tiny_cfg, params, calib, base, seed=0, **extra):
+    return gradual_prune(tiny_cfg, params, ENV, TARGETS, _data(tiny_cfg),
+                         calib, ckpt_dir=base, seed=seed,
+                         **_kw(tiny_cfg), **extra)
+
+
+def _tree_equal(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def family_calib(tiny_cfg):
+    return calibration_batches(tiny_cfg, 16, 64, batch=8)
+
+
+@pytest.fixture(scope="module")
+def chaos_clean_family(tiny_cfg, tiny_params, family_calib,
+                       tmp_path_factory):
+    base = str(tmp_path_factory.mktemp("chaos_clean"))
+    return _run(tiny_cfg, tiny_params, family_calib, base)
+
+
+@pytest.fixture(scope="module")
+def tiny_hessians(tiny_cfg, tiny_params, family_calib):
+    return collect_hessians(tiny_cfg, tiny_params, family_calib)
+
+
+@pytest.mark.chaos
+def test_fault_free_run_bit_identical_under_armed_plan(
+        tiny_cfg, tiny_params, family_calib, tmp_path, chaos_clean_family):
+    """Acceptance (d): with the full robustness layer armed (a plan
+    installed whose rules never reach their nth hit), the family run is
+    bit-identical to the clean run — the layer's clean path costs zero
+    numerics."""
+    plan = FaultPlan.parse(
+        ",".join(f"{s}:raise@100000" for s in
+                 ("calib.batch", "obs.cholesky", "db.artifact_write",
+                  "ckpt.async_write", "spdy.batched_eval")))
+    rep = RobustnessReport()
+    with install(plan):
+        got = _run(tiny_cfg, tiny_params, family_calib, str(tmp_path),
+                   report=rep)
+    assert [v.target for v in got] == \
+        [v.target for v in chaos_clean_family]
+    for vf, vr in zip(chaos_clean_family, got):
+        assert vf.assignment == vr.assignment
+        assert _tree_equal(vf.params, vr.params)
+        assert vf.loss_before_ft == vr.loss_before_ft
+        assert vf.loss_after_ft == vr.loss_after_ft
+    assert rep.total("detected") == 0 and rep.total("demotions") == 0
+    assert not rep.quarantined
+
+
+@pytest.mark.chaos
+def test_corrupt_db_artifact_quarantined_and_rebuilt_bit_identical(
+        tiny_cfg, tiny_params, family_calib, tmp_path):
+    """Acceptance (a): a corrupted db.npz is quarantined (*.corrupt) on
+    resume, the db stage re-executes from the hessians artifact, and the
+    rebuilt file is byte-identical to the original."""
+    base = str(tmp_path)
+    first = _run(tiny_cfg, tiny_params, family_calib, base)
+    rdir = family_run_dir(tiny_cfg, TARGETS, 0, base)
+    dpath = os.path.join(rdir, "t2", "db.npz")
+    with open(dpath, "rb") as f:
+        orig = f.read()
+    assert corrupt_bytes(dpath, seed=3)
+
+    rep = RobustnessReport()
+    second = _run(tiny_cfg, tiny_params, family_calib, base, report=rep)
+
+    assert os.path.exists(dpath + ".corrupt")
+    with open(dpath, "rb") as f:
+        assert f.read() == orig                      # bit-identical rebuild
+    assert rep.quarantined and rep.quarantined[0].endswith(".corrupt")
+    for vf, vr in zip(first, second):
+        assert vf.assignment == vr.assignment
+        assert _tree_equal(vf.params, vr.params)
+    # the manifest recorded the rebuild and its (unchanged) sha
+    with open(os.path.join(rdir, "family.json")) as f:
+        man = json.load(f)
+    assert ("2", "db") in [(e["target"], e["stage"])
+                           for e in man["executed"] if e["run"] == 2]
+    assert man["robustness"]["quarantined"]
+
+
+@pytest.mark.chaos
+def test_nan_calib_batch_skipped_pruning_order_preserved(
+        tiny_cfg, tiny_params):
+    """Acceptance (b): a NaN-poisoned calibration batch is skipped and
+    counted, and the result — Hessians AND the OBS pruning order built
+    from them — is bit-identical to a clean run over the remaining
+    batches."""
+    batches = calibration_batches(tiny_cfg, 24, 64, batch=8)
+    assert len(batches) == 3
+    rep = RobustnessReport()
+    with install(FaultPlan.parse("calib.batch:nan@1")), report_scope(rep):
+        h_faulty = collect_hessians(tiny_cfg, tiny_params, batches)
+    assert rep.counts["detected"]["calib.batch"] == 1
+    assert rep.counts["recovered"]["calib.batch"] == 1
+
+    h_clean = collect_hessians(tiny_cfg, tiny_params,
+                               [batches[0], batches[2]])
+    assert sorted(h_faulty) == sorted(h_clean)
+    for k in h_clean:
+        np.testing.assert_array_equal(np.asarray(h_faulty[k]),
+                                      np.asarray(h_clean[k]))
+    db_f = build_database(tiny_cfg, tiny_params, h_faulty)
+    db_c = build_database(tiny_cfg, tiny_params, h_clean)
+    for name in db_c:
+        np.testing.assert_array_equal(np.asarray(db_f[name].order),
+                                      np.asarray(db_c[name].order))
+
+
+@pytest.mark.chaos
+def test_all_calib_batches_poisoned_raises(tiny_cfg, tiny_params):
+    batches = calibration_batches(tiny_cfg, 16, 64, batch=8)
+    with install(FaultPlan.parse(f"calib.batch:nan@0x{len(batches)}")):
+        with pytest.raises(FloatingPointError, match="every calibration"):
+            collect_hessians(tiny_cfg, tiny_params, batches)
+
+
+@pytest.mark.chaos
+def test_ckpt_async_write_fault_raises_at_wait(tmp_path):
+    """Acceptance (c): a persistently failing async checkpoint write
+    surfaces as CheckpointWriteError at wait() after bounded retries."""
+    rep = RobustnessReport()
+    with install(FaultPlan.parse("ckpt.async_write:oserror@0x99")), \
+            report_scope(rep):
+        m = CheckpointManager(str(tmp_path), keep=2)
+        m.save(1, {"a": jnp.ones((2,))})
+        with pytest.raises(CheckpointWriteError) as ei:
+            m.wait()
+        assert any(isinstance(e, FaultIOError) for e in ei.value.errors)
+    assert rep.counts["retries"]["ckpt.async_write"] == 3
+    assert rep.counts["detected"]["ckpt.async_write"] == 1
+
+
+@pytest.mark.chaos
+def test_ckpt_transient_fault_heals(tmp_path):
+    """One injected transient write failure: retry heals it, wait() stays
+    silent, the checkpoint is valid."""
+    rep = RobustnessReport()
+    with install(FaultPlan.parse("ckpt.async_write:oserror@0")), \
+            report_scope(rep):
+        m = CheckpointManager(str(tmp_path), keep=2)
+        m.save(1, {"a": jnp.ones((2,))})
+        m.wait()
+        assert m.latest_step() == 1
+    assert rep.counts["recovered"]["ckpt.async_write"] == 1
+
+
+@pytest.mark.chaos
+def test_obs_cholesky_poison_heals_with_damping_ladder(
+        tiny_cfg, tiny_params, tiny_hessians):
+    """An injected non-finite inverse Hessian triggers the percdamp
+    escalation ladder: the chunk retries at 10x damp and the database
+    comes out fully finite, with the detection/recovery counted."""
+    rep = RobustnessReport()
+    with install(FaultPlan.parse("obs.cholesky:nan@0")), report_scope(rep):
+        db = build_database(tiny_cfg, tiny_params, tiny_hessians)
+    assert rep.counts["detected"]["obs.cholesky"] >= 1
+    assert rep.counts["recovered"]["obs.cholesky"] >= 1
+    for mdb in db.values():
+        assert np.isfinite(np.asarray(mdb.errors)).all()
+        assert np.isfinite(np.asarray(mdb.snapshots)).all()
+
+
+@pytest.mark.chaos
+def test_pallas_failure_demotes_to_ref_once():
+    """kernel.pallas fault -> per-op breaker trips, the call is served by
+    the jnp oracle, and later calls short-circuit without re-logging."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    rep = RobustnessReport()
+    with install(FaultPlan.parse("kernel.pallas:raise@0")), \
+            report_scope(rep):
+        h = ops.hessian_accum(x)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(x.T @ x),
+                                   atol=1e-4, rtol=1e-5)
+        assert rep.breaker_open("kernel.pallas:hessian_accum")
+        h2 = ops.hessian_accum(x)                    # breaker open -> ref
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(h2))
+    assert rep.counts["demotions"]["kernel.pallas:hessian_accum"] == 1
+    assert rep.counts["injected"]["kernel.pallas"] == 1
+
+
+@pytest.mark.chaos
+def test_latency_measure_failure_demotes_to_costmodel(tmp_path):
+    """Measured-latency failure -> breaker trips, the cached entry is
+    quarantined, and this plus every later measure call is served by the
+    analytic roofline backend."""
+    from repro.configs import GPT2_SMALL
+    TINY = GPT2_SMALL.replace(
+        name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+        num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+    KW = dict(grid_subsample=8, reps=1)
+    d = str(tmp_path)
+    env = InferenceEnv(batch=4, seq=32, mode="prefill")
+    build_table(TINY, env, backend="measure", cache_dir=d, **KW)
+    ref_tab = build_costmodel_table(TINY, env)
+
+    rep = RobustnessReport()
+    with install(FaultPlan.parse("latency.measure:raise@0")), \
+            report_scope(rep):
+        t1 = build_table(TINY, env, backend="measure", cache_dir=d,
+                         refresh=True, **KW)
+        assert t1.base == ref_tab.base
+        for k in ref_tab.times:
+            np.testing.assert_array_equal(t1.times[k], ref_tab.times[k])
+        assert rep.breaker_open("latency.measure")
+        assert any(f.endswith(".corrupt") for f in os.listdir(d))
+        t2 = build_table(TINY, env, backend="measure", cache_dir=d, **KW)
+        assert t2.base == ref_tab.base               # short-circuited
+    assert rep.counts["demotions"]["latency.measure"] == 1
+
+
+@pytest.mark.chaos
+def test_spdy_batched_eval_failure_falls_back_serial(
+        tiny_cfg, tiny_params, tiny_hessians):
+    """A batched stitch/eval blowup (simulated OOM) trips the breaker and
+    the round is re-scored on the serial per-candidate path — same
+    candidates, same memo, identical search result."""
+    db = build_database(tiny_cfg, tiny_params, tiny_hessians)
+    table = build_costmodel_table(tiny_cfg, ENV)
+    calls = {"batched": 0}
+
+    def eval_fn(a):
+        return float(sum(a.values()))
+
+    def eval_batched(assigns):
+        calls["batched"] += 1
+        raise RuntimeError("simulated stitch OOM")
+
+    rep = RobustnessReport()
+    with report_scope(rep):
+        res = search(db, table, 1.5, steps=4, pop=4, batched=True, seed=0,
+                     eval_fn=eval_fn, eval_batched=eval_batched)
+    assert calls["batched"] == 1                     # tried once, demoted
+    assert rep.counts["demotions"]["spdy.batched_eval"] == 1
+    ref = search(db, table, 1.5, steps=4, pop=4, batched=True, seed=0,
+                 eval_fn=eval_fn, eval_batched=None)
+    assert res.assignment == ref.assignment
+    assert res.score == ref.score
+
+
+@pytest.mark.chaos
+def test_trainer_guard_skips_nan_steps(tiny_cfg, tmp_path):
+    """Non-finite losses skip the step (state update discarded, EF
+    residual reset) and training still completes all steps."""
+    from repro.models import model_init
+    params, _ = model_init(tiny_cfg, jax.random.key(0))
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=2)
+    t = Trainer(tiny_cfg, tcfg, ckpt_dir=str(tmp_path), ckpt_every=50)
+    real_step = t.step_fn
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        new_state, metrics = real_step(state, batch)
+        if calls["n"] in (3, 4):
+            metrics = dict(metrics)
+            metrics["loss"] = jnp.float32(jnp.nan)
+        return new_state, metrics
+
+    t.step_fn = step
+    rep = RobustnessReport()
+    with report_scope(rep):
+        state = t.init_or_restore(params)
+        state = t.fit(state, synthetic_stream(tiny_cfg, 8, 32, seed=3),
+                      steps=10)
+    assert int(state.step) == 10
+    assert t.guard["skipped"] == [3, 3]              # both attempts at step 3
+    assert t.guard["reloads"] == 0
+    assert rep.counts["detected"]["train.step"] == 2
+    t.ckpt.close()
+
+
+@pytest.mark.chaos
+def test_trainer_guard_reloads_then_raises_without_progress(
+        tiny_cfg, tmp_path):
+    """Persistent NaN losses: after max_bad_steps the trainer reloads the
+    last checkpoint; a second fruitless reload at the same step raises
+    instead of spinning forever."""
+    from repro.models import model_init
+    params, _ = model_init(tiny_cfg, jax.random.key(0))
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=2)
+    t = Trainer(tiny_cfg, tcfg, ckpt_dir=str(tmp_path), ckpt_every=50,
+                max_bad_steps=2)
+    real_step = t.step_fn
+
+    def step(state, batch):
+        new_state, metrics = real_step(state, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = jnp.float32(jnp.inf)
+        return new_state, metrics
+
+    t.step_fn = step
+    state = t.init_or_restore(params)
+    with pytest.raises(RuntimeError, match="cannot progress"):
+        t.fit(state, synthetic_stream(tiny_cfg, 8, 32, seed=3), steps=10)
+    assert t.guard["reloads"] == 1
+    t.ckpt.close()

@@ -101,6 +101,58 @@ def test_corrupted_file_is_a_miss_not_a_crash(tmp_path):
     assert lc.get(TINY, ENV, **KW) is None
 
 
+def test_miss_telemetry_names_corrupt_and_foreign_files(tmp_path):
+    """Quarantine telemetry: corrupt (unparseable / payload-hash
+    mismatch) and foreign (wrong format_version or key) cache files are
+    counted separately in TIMING_STATS and named in cache_flagged; a
+    plain cold miss counts neither."""
+    d = str(tmp_path)
+    lc = LatencyCache(d)
+    c0 = latency.TIMING_STATS["cache_corrupt"]
+    f0 = latency.TIMING_STATS["cache_foreign"]
+    n0 = len(latency.TIMING_STATS["cache_flagged"])
+
+    assert lc.get(TINY, ENV, **KW) is None           # cold miss: no flags
+    assert latency.TIMING_STATS["cache_corrupt"] == c0
+    assert latency.TIMING_STATS["cache_foreign"] == f0
+
+    tab = build_measured_table(TINY, ENV, **KW)
+    lc.put(TINY, ENV, tab, **KW)
+    (path,) = glob.glob(os.path.join(d, "lat_*.json"))
+
+    with open(path, "w") as f:
+        f.write("{broken")
+    assert lc.get(TINY, ENV, **KW) is None
+    assert latency.TIMING_STATS["cache_corrupt"] == c0 + 1
+    assert os.path.basename(path) in latency.TIMING_STATS["cache_flagged"]
+
+    lc.put(TINY, ENV, tab, **KW)
+    with open(path) as f:
+        rec = json.load(f)
+    rec["format_version"] = FORMAT_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    assert lc.get(TINY, ENV, **KW) is None
+    assert latency.TIMING_STATS["cache_foreign"] == f0 + 1
+    assert len(latency.TIMING_STATS["cache_flagged"]) == n0 + 2
+    # the file itself is untouched by get (put overwrites it; renames
+    # happen only through quarantine())
+    assert os.path.exists(path)
+
+
+def test_quarantine_renames_key_file(tmp_path):
+    d = str(tmp_path)
+    lc = LatencyCache(d)
+    assert lc.quarantine(TINY, ENV, **KW) is None    # nothing cached yet
+    tab = build_measured_table(TINY, ENV, **KW)
+    lc.put(TINY, ENV, tab, **KW)
+    (path,) = glob.glob(os.path.join(d, "lat_*.json"))
+    qpath = lc.quarantine(TINY, ENV, **KW)
+    assert qpath == path + ".corrupt" and os.path.exists(qpath)
+    assert not os.path.exists(path)
+    assert lc.get(TINY, ENV, **KW) is None           # now a plain miss
+
+
 def test_key_covers_device_and_jax_version():
     key = cache_key(TINY, ENV, KW)
     assert "jax_version" in key["device"]

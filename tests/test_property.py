@@ -104,6 +104,64 @@ def test_hessian_psd(seed, n, d):
 
 
 # ----------------------------------------------------------------------
+# Numerical self-healing invariants (robustness layer).
+# ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    d=st.integers(2, 24),
+    rank=st.integers(1, 4),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 10_000),
+)
+def test_build_hessian_finite_on_degenerate_calib(n, d, rank, dtype, seed):
+    """Rank-deficient / duplicate-row calibration activations must still
+    yield a finite damped Hessian with a finite Cholesky factor and
+    inverse, in both calibration dtypes — the precondition the OBS
+    engine's damping ladder builds on."""
+    rng = np.random.default_rng(seed)
+    rank = min(rank, d)
+    base = rng.standard_normal((rank, d))
+    rows = base[rng.integers(0, rank, size=n)]  # duplicated rows
+    X = jnp.asarray(rows, jnp.dtype(dtype)).astype(jnp.float32)
+    H = build_hessian(X.T @ X / n, 1e-4)
+    assert np.isfinite(np.asarray(H)).all()
+    L = jnp.linalg.cholesky(H)
+    assert np.isfinite(np.asarray(L)).all()
+    assert np.isfinite(np.asarray(jnp.linalg.inv(H))).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_groups=st.integers(2, 5),
+    gs=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+def test_damping_ladder_converges_near_singular(n_groups, gs, seed):
+    """Some rung of the percdamp escalation ladder produces an entirely
+    finite prune on a rank-1 (maximally ill-conditioned) Hessian, even
+    starting from an absurdly small base damp — the invariant
+    database._prune_healed relies on to terminate."""
+    from repro.robustness.healing import damp_schedule
+    rng = np.random.default_rng(seed)
+    d_in = n_groups * gs
+    v = rng.standard_normal((1, d_in))
+    xtx = jnp.asarray(v.T @ v, jnp.float32)
+    W = jnp.asarray(rng.standard_normal((d_in, 4)), jnp.float32)
+    for damp in damp_schedule(1e-10, retries=6):
+        Hinv = jnp.linalg.inv(build_hessian(xtx, damp))
+        if not np.isfinite(np.asarray(Hinv)).all():
+            continue
+        res = prune_structured(W, Hinv, group_size=gs, n_remove=n_groups,
+                               levels=tuple(range(n_groups + 1)))
+        if (np.isfinite(np.asarray(res.errors)).all()
+                and np.isfinite(np.asarray(res.snapshots)).all()):
+            return
+    raise AssertionError("no damping rung produced a finite prune")
+
+
+# ----------------------------------------------------------------------
 # Pallas kernels vs their jnp oracles across adversarial (odd) shapes.
 # All randomness flows through a drawn integer seed -> np rng, so every
 # failing example is replayable from hypothesis' shrunk seed alone.
