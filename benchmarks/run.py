@@ -32,6 +32,11 @@ used V100/A100 measurements (DESIGN.md §3).
             batch, transient async-ckpt write failure, kill mid-finetune,
             corrupted db artifact rebuilt on resume); appended to
             BENCH_db.json
+  serve     continuous-batching engine over a speedup-target family: warm
+            tokens/s, prefill ms, decode ms/token, p50/p99 request latency
+            for dense vs pruned members on the same Poisson stream, plus
+            per-layer KV-cache byte accounting (pruned strictly < dense,
+            asserted); appended to BENCH_db.json
 
 Run a subset with ``python benchmarks/run.py db_build spdy_eval``.
 ``--faults SITE:MODE[@N][xC][~D],...`` installs a deterministic
@@ -1050,6 +1055,76 @@ def bench_chaos():
         f"detected={sum(rep.counts['detected'].values())}")
 
 
+def bench_serve():
+    """Continuous-batching serving over a ZipLM family: one resident
+    snapshot stack hosts dense + pruned members; every member serves the
+    SAME seeded Poisson stream (warm — compiles excluded by warmup) so
+    tokens/s, prefill ms, decode ms/token and p50/p99 request latency are
+    directly comparable, then a routed mixed-class run exercises the
+    latency-class router. Per-layer KV-cache accounting is checked
+    in-line: each pruned member's cache bytes must equal the shrunk
+    per-layer plan and be strictly below dense."""
+    from repro.core.shrink import kv_cache_plan
+    from repro.models.layers import compute_dtype
+    from repro.serve import DENSE_TARGET, FamilyServer, synthetic_requests
+
+    cfg = TINY
+    params, _ = model_init(cfg, jax.random.key(0))
+    db = baseline_database(cfg, params, kind="magnitude")
+    env = InferenceEnv(batch=4, seq=64, mode="prefill")
+    table = build_table(cfg, env, backend="measure", grid_subsample=6,
+                        reps=2, **LAT_CACHE)
+    targets = [1.5, 2.0]
+    assignments = {t: uniform_assignment(cfg, table, t) for t in targets}
+    max_len, nslots = 48, 4
+    n_req = 8 if _SMOKE else 32
+    server = FamilyServer(cfg, params, db, assignments, max_len=max_len,
+                          num_slots=nslots)
+    server.warmup((8, 16))
+    reqs = synthetic_requests(cfg, n_req, seed=0, rate=200.0,
+                              prompt_lens=(8, 12, 16),
+                              steps_range=(4, 12))
+
+    itemsize = compute_dtype(cfg).itemsize
+    members = {}
+    for t, eng in sorted(server.members.items()):
+        rep = eng.run(reqs)           # same stream through every member
+        m = rep.as_dict()
+        plan = ([cfg.num_kv_heads] * cfg.num_layers if t == DENSE_TARGET
+                else kv_cache_plan(cfg, db, assignments[t]))
+        expect = sum(2 * nslots * max_len * h * cfg.head_dim * itemsize
+                     for h in plan)
+        if m["kv_cache_bytes"] != expect:
+            raise RuntimeError(
+                f"member {t}x KV bytes {m['kv_cache_bytes']} != per-layer "
+                f"plan {expect} (kv heads {plan})")
+        m["kv_heads_per_layer"] = plan
+        members[f"{t:g}x"] = m
+    dense_bytes = members[f"{DENSE_TARGET:g}x"]["kv_cache_bytes"]
+    for key, m in members.items():
+        if key != f"{DENSE_TARGET:g}x" and m["kv_cache_bytes"] >= dense_bytes:
+            raise RuntimeError(
+                f"pruned member {key} KV cache ({m['kv_cache_bytes']} B) "
+                f"not strictly below dense ({dense_bytes} B)")
+
+    routed = {f"{t:g}x": r.as_dict()
+              for t, r in server.run(reqs).items()}
+
+    rec = {"config": cfg.name, "targets": targets, "smoke": _SMOKE,
+           "max_len": max_len, "num_slots": nslots, "requests": n_req,
+           "members": members, "routed": routed}
+    _write_bench_db({("serve_smoke" if _SMOKE else "serve"): rec})
+    d = members[f"{DENSE_TARGET:g}x"]
+    detail = [f"dense {d['tokens_per_s']:.0f} tok/s "
+              f"kv={d['kv_cache_bytes']//1024}KiB"]
+    for t in targets:
+        m = members[f"{t:g}x"]
+        detail.append(f"{t:g}x {m['tokens_per_s']:.0f} tok/s "
+                      f"decode={m['decode_ms_per_token_mean']:.2f}ms "
+                      f"kv={m['kv_cache_bytes']//1024}KiB")
+    row("serve", d["decode_ms_per_token_mean"] * 1e3, " | ".join(detail))
+
+
 def bench_roofline():
     files = sorted(glob.glob(os.path.join(
         os.path.dirname(__file__), "..", "results", "dryrun", "*.json")))
@@ -1088,13 +1163,14 @@ BENCHES = {
     "calib_shard": bench_calib_shard,
     "latency_cache": bench_latency_cache,
     "chaos": bench_chaos,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 
 # benches that run on synthetic weights/hessians; no tiny-GPT2 training
 _NO_TRAIN = {"table7", "table3", "kernels", "db_build", "db_build_compact",
              "spdy_eval", "spdy_search", "calib_shard", "latency_cache",
-             "roofline", "gradual_family", "chaos"}
+             "roofline", "gradual_family", "chaos", "serve"}
 
 # --smoke: shrink bench shapes/steps for the CI end-to-end pass
 # (currently honored by gradual_family; harmless elsewhere)

@@ -23,3 +23,6 @@ python benchmarks/run.py gradual_family --smoke
 
 echo "== chaos smoke bench =="
 python benchmarks/run.py chaos --smoke
+
+echo "== serve smoke bench =="
+python benchmarks/run.py serve --smoke

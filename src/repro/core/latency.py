@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models.layers import compute_dtype as _compute_dtype
 from ..robustness import faults as _faults
 from ..robustness.report import current_report
 from ..runtime import costmodel as cm
@@ -184,7 +185,7 @@ def build_measured_table(cfg, env: cm.InferenceEnv, *,
     Subsamples the level grid (interp fills gaps) to keep build time sane.
     """
     tab = LatencyTable(env=env)
-    dt = jnp.dtype(cfg.dtype)
+    dt = _compute_dtype(cfg)
     t_tok = env.tokens
     key = jax.random.key(0)
 

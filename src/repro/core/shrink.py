@@ -165,3 +165,145 @@ def shrink(cfg, params, db: Dict[str, ModuleDB],
     if params.get("head"):
         globals_["head"] = params["head"]
     return PrunedModel(cfg=cfg, layers=out_layers, globals_=globals_)
+
+
+def kv_cache_plan(cfg, db: Dict[str, ModuleDB],
+                  assignment: Dict[str, int]) -> List[int]:
+    """Per-layer KV-head counts the shrunk model needs at serving time.
+
+    Feed this to ``transformer.init_cache(kv_heads=...)`` (or let
+    ``models.pruned.init_cache_pruned`` derive it) so the KV cache is sized
+    by the *pruned* structure — entry 0 means the layer's attention module
+    is gone and allocates no cache at all.
+    """
+    plan: List[int] = []
+    for l in range(cfg.num_layers):
+        aname = f"L{l}.attn"
+        if aname in assignment:
+            plan.append(len(db[aname].kept_structures(assignment[aname])))
+        else:
+            plan.append(cfg.num_kv_heads if cfg.attention != "none" else 0)
+    return plan
+
+
+def shrink_from_stitched(cfg, stitched, db: Dict[str, ModuleDB],
+                         assignment: Dict[str, int]) -> PrunedModel:
+    """Device-resident shrink from a ``SnapshotCache.apply`` stitched tree.
+
+    ``shrink`` round-trips every weight through host numpy; this variant
+    slices with ``jnp.take`` directly on the stitched tree (whose out-side
+    matrices already hold the per-level snapshots), so a family server can
+    materialize a member without pulling params off the device. Produces
+    the same ``PrunedModel`` as ``shrink`` (tested for equality).
+    """
+    dh = cfg.resolved_head_dim
+    qpk = cfg.q_per_kv
+    layers_p = stitched["layers"]
+    out_layers: List[PrunedLayer] = []
+
+    def take(a, idx, axis):
+        return jnp.take(a, jnp.asarray(idx, jnp.int32), axis=axis)
+
+    for l in range(cfg.num_layers):
+        lcfg = PrunedLayer()
+        lp: Dict = {}
+
+        aname = f"L{l}.attn"
+        if aname in assignment:
+            kept = db[aname].kept_structures(assignment[aname])
+            lcfg.kv_groups = len(kept)
+            if len(kept) > 0:
+                q_rows = _rows_for_groups(kept, qpk * dh)
+                kv_rows = _rows_for_groups(kept, dh)
+                ap = {k: v[l] for k, v in layers_p["attn"].items()}
+                new_attn = {
+                    "wq": take(ap["wq"], q_rows, 1),
+                    "wk": take(ap["wk"], kv_rows, 1),
+                    "wv": take(ap["wv"], kv_rows, 1),
+                    "wo": take(ap["wo"].astype(jnp.float32), q_rows, 0),
+                }
+                if cfg.qkv_bias:
+                    new_attn["bq"] = take(ap["bq"], q_rows, 0)
+                    new_attn["bk"] = take(ap["bk"], kv_rows, 0)
+                    new_attn["bv"] = take(ap["bv"], kv_rows, 0)
+                lp["attn"] = new_attn
+                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
+
+        sname = f"L{l}.ssm"
+        if sname in assignment:
+            kept = db[sname].kept_structures(assignment[sname])
+            lcfg.ssm_heads = len(kept)
+            if len(kept) > 0:
+                hp = cfg.ssm_head_dim
+                rows = _rows_for_groups(kept, hp)
+                sp = {k: v[l] for k, v in layers_p["ssm"].items()}
+                lp["ssm"] = {
+                    "in_z": take(sp["in_z"], rows, 1),
+                    "in_x": take(sp["in_x"], rows, 1),
+                    "in_bc": sp["in_bc"],
+                    "in_dt": take(sp["in_dt"], kept, 1),
+                    "conv_x": take(sp["conv_x"], rows, 1),
+                    "conv_x_b": take(sp["conv_x_b"], rows, 0),
+                    "conv_bc": sp["conv_bc"],
+                    "conv_bc_b": sp["conv_bc_b"],
+                    "A_log": take(sp["A_log"], kept, 0),
+                    "D": take(sp["D"], kept, 0),
+                    "dt_bias": take(sp["dt_bias"], kept, 0),
+                    "norm": take(sp["norm"], rows, 0),
+                    "out_proj": take(sp["out_proj"].astype(jnp.float32),
+                                     rows, 0),
+                }
+                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
+
+        fname = f"L{l}.ffn"
+        if fname in assignment:
+            kept = db[fname].kept_structures(assignment[fname])
+            lcfg.d_ff = len(kept)
+            if len(kept) > 0:
+                fp = {k: v[l] for k, v in layers_p["ffn"].items()}
+                if "wg" in fp:
+                    lp["ffn"] = {
+                        "wg": take(fp["wg"], kept, 1),
+                        "wu": take(fp["wu"], kept, 1),
+                        "wd": take(fp["wd"].astype(jnp.float32), kept, 0),
+                    }
+                else:
+                    lp["ffn"] = {
+                        "wi": take(fp["wi"], kept, 1),
+                        "bi": take(fp["bi"], kept, 0),
+                        "wd": take(fp["wd"].astype(jnp.float32), kept, 0),
+                        "bd": fp["bd"],
+                    }
+                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
+
+        ename = f"L{l}.expert0"
+        if ename in assignment:
+            experts = []
+            mp = layers_p["moe"]
+            for e in range(cfg.num_experts):
+                kept = db[f"L{l}.expert{e}"].kept_structures(
+                    assignment[f"L{l}.expert{e}"])
+                if len(kept) == 0:
+                    experts.append(None)
+                    lcfg.expert_ff.append(0)
+                    continue
+                experts.append({
+                    "wg": take(mp["wg"][l, e], kept, 1),
+                    "wu": take(mp["wu"][l, e], kept, 1),
+                    "wd": take(mp["wd"][l, e].astype(jnp.float32), kept, 0),
+                })
+                lcfg.expert_ff.append(len(kept))
+            if any(ep is not None for ep in experts):
+                lp["moe"] = {"router": mp["router"][l], "experts": experts}
+                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
+            else:
+                lcfg.expert_ff = []
+
+        lcfg.params = lp
+        out_layers.append(lcfg)
+
+    globals_ = {"embed": stitched["embed"],
+                "final_norm": stitched["final_norm"]}
+    if stitched.get("head"):
+        globals_["head"] = stitched["head"]
+    return PrunedModel(cfg=cfg, layers=out_layers, globals_=globals_)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models.layers import compute_dtype
+
 
 def _markov_table(vocab: int, seed: int, branch: int = 8) -> np.ndarray:
     """Sparse-ish row-stochastic transition table (vocab, branch) targets."""
@@ -62,7 +64,7 @@ def make_batch_np(cfg, batch: int, seq: int, *, seed: int = 0,
         rng = np.random.default_rng(seed * 13 + step)
         b["frontend"] = jnp.asarray(
             rng.standard_normal((batch, cfg.num_frontend_tokens,
-                                 cfg.frontend_dim)), jnp.dtype(cfg.dtype))
+                                 cfg.frontend_dim)), compute_dtype(cfg))
     return b
 
 

@@ -189,7 +189,10 @@ def self_attention(cfg, p, x, *, cache=None, cache_pos=None, capture=None):
     """Self-attention for train/prefill (cache=None) or decode (cache given).
 
     cache: dict(k=(B,Sc,HKV,D), v=...) — ring buffer for sliding-window.
-    cache_pos: scalar int32 — absolute position of the current token.
+    cache_pos: absolute position of the current token — a scalar int32
+    (lockstep batch, the classic ``generate`` loop) or a (B,) int32 vector
+    (per-slot positions, the continuous-batching serving engine; each slot
+    writes its own cache row and masks its own prefix).
     Returns (out, new_cache).
     """
     b, sq, _ = x.shape
@@ -213,28 +216,41 @@ def self_attention(cfg, p, x, *, cache=None, cache_pos=None, capture=None):
     else:
         # single-token decode: sq == 1
         sc = cache["k"].shape[1]
-        pos = cache_pos.reshape(1, 1)
+        vec = jnp.ndim(cache_pos) == 1  # per-slot positions (serving engine)
         if cfg.pos_emb == "rope":
-            q = apply_rope(q, jnp.broadcast_to(pos, (b, 1)), cfg.rope_theta)
-            k = apply_rope(k, jnp.broadcast_to(pos, (b, 1)), cfg.rope_theta)
+            posq = cache_pos[:, None] if vec else \
+                jnp.broadcast_to(cache_pos.reshape(1, 1), (b, 1))
+            q = apply_rope(q, posq, cfg.rope_theta)
+            k = apply_rope(k, posq, cfg.rope_theta)
         slot = (cache_pos % sc) if window else jnp.minimum(cache_pos, sc - 1)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
-        # positions of cached entries
+        if vec:
+            # per-slot scatter: slot i writes its own row
+            ck = cache["k"].at[jnp.arange(b), slot].set(k[:, 0])
+            cv = cache["v"].at[jnp.arange(b), slot].set(v[:, 0])
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=1)
+        # positions of cached entries; posb broadcasts the scalar path so
+        # one mask expression covers both (identical values for scalars)
         idx = jnp.arange(sc)
+        posb = cache_pos[:, None] if vec else \
+            jnp.broadcast_to(cache_pos, (1,))[:, None]        # (B|1, 1)
         if window:
             # ring buffer: entry i holds abs position p with p % sc == i,
             # p in (cache_pos - sc, cache_pos]
-            kpos = cache_pos - ((cache_pos - idx) % sc)
+            kpos = posb - ((posb - idx[None, :]) % sc)
         else:
-            kpos = idx
-        valid = (kpos <= cache_pos) & (kpos >= 0)  # >=0: unwritten ring slots
+            kpos = jnp.broadcast_to(idx[None, :], posb.shape[:1] + (sc,))
+        valid = (kpos <= posb) & (kpos >= 0)  # >=0: unwritten ring slots
         if window:
-            valid &= kpos > cache_pos - window
+            valid &= kpos > posb - window
         qg = _grouped(q, cfg.num_kv_heads)
         scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
         logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck) * scale
-        logits = jnp.where(valid[None, :], logits.astype(jnp.float32), NEG_INF)
+        logits = jnp.where(valid[:, None, None, None, :],
+                           logits.astype(jnp.float32), NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
         out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv)
         out = out.reshape(b, sq, cfg.num_heads, cfg.resolved_head_dim)

@@ -26,7 +26,17 @@ import jax.numpy as jnp
 
 
 def compute_dtype(cfg) -> jnp.dtype:
-    return jnp.dtype(cfg.dtype)
+    """Activation/compute dtype for ``cfg``.
+
+    ``cfg.dtype`` is either a plain dtype name ("float32", "bfloat16", ...)
+    or ``"mixed_<dtype>"`` — fp32 master params with ``<dtype>`` compute.
+    Every batch factory and activation cast must go through this helper;
+    ``jnp.dtype(cfg.dtype)`` directly chokes on the mixed spelling.
+    """
+    d = cfg.dtype
+    if isinstance(d, str) and d.startswith("mixed_"):
+        d = d[len("mixed_"):]
+    return jnp.dtype(d)
 
 
 def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):

@@ -86,14 +86,29 @@ def input_specs(cfg, shape_cfg, *, for_grad: bool = False) -> Dict[str, Any]:
 def serve_prefill(cfg, params, batch, max_len: Optional[int] = None):
     """Prefill: full forward that also materializes the decode cache.
 
-    ``max_len`` sizes the KV cache (prompt + generation headroom); defaults
-    to 2x the prompt length.
+    ``max_len`` sizes the KV cache; callers that know their generation
+    length must pass ``prompt_len + steps`` (``generate`` does) — the
+    fallback of 2x the prompt length is only headroom for interactive use.
+    Decoding past the cache capacity is NOT silently tolerated by the
+    full-attention decode path (the write index clamps to the last slot,
+    corrupting every later token), so ``generate``/the serving engine
+    raise before stepping past it.
     """
     b, s = batch["tokens"].shape
     max_len = max_len or 2 * s
     out = forward(cfg, params, batch["tokens"],
                   frontend_embeds=batch.get("frontend"), mode="prefill")
-    cache = init_cache(cfg, b, max_len)
+    cache = assemble_prefill_cache(cfg, out, b, s, max_len)
+    return out["logits"][:, -1:], cache
+
+
+def assemble_prefill_cache(cfg, out, batch: int, s: int, max_len: int):
+    """Build the decode cache from a prefill ``forward`` output dict.
+
+    Shared by ``serve_prefill`` and the continuous-batching engine (which
+    prefills at a padded bucket length and re-homes rows into slots).
+    """
+    cache = init_cache(cfg, batch, max_len)
     if "cache" in out:
         pre = out["cache"]  # (L,B,Sc,HKV,D), ring-rolled if SWA
         sc = cache["attn"]["k"].shape[2]
@@ -113,7 +128,7 @@ def serve_prefill(cfg, params, batch, max_len: Optional[int] = None):
     if "cross_kv" in out:
         cache["cross"] = out["cross_kv"]
     cache["pos"] = jnp.asarray(s, jnp.int32)
-    return out["logits"][:, -1:], cache
+    return cache
 
 
 def serve_step(cfg, params, cache, tokens):
@@ -121,16 +136,51 @@ def serve_step(cfg, params, cache, tokens):
     return decode_step(cfg, params, cache, tokens)
 
 
-def generate(cfg, params, prompt, steps: int, *, frontend=None, key=None):
-    """Greedy/top-k generation loop (host-side loop; used in examples)."""
+def sample_token(logits, key=None, *, temperature: float = 1.0,
+                 top_k: int = 0):
+    """Next token from (B,1,V) logits: greedy if key is None, else sampled.
+
+    ``temperature`` scales the logits before sampling; ``top_k > 0``
+    restricts sampling to the k highest-probability tokens.
+    """
+    if key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def generate(cfg, params, prompt, steps: int, *, frontend=None, key=None,
+             temperature: float = 1.0, top_k: int = 0,
+             max_len: Optional[int] = None):
+    """Generation loop (host-side; used in examples and as a serving oracle).
+
+    Greedy when ``key=None``; temperature/top-k sampling when a PRNG key is
+    passed. The KV cache is sized ``prompt_len + steps`` by default so the
+    requested generation always fits; an explicit smaller ``max_len`` raises
+    instead of silently clamping the cache write index.
+    """
+    s = prompt.shape[1]
+    if max_len is None:
+        max_len = s + steps
+    if s + steps > max_len:
+        raise RuntimeError(
+            f"generation overflows the KV cache: prompt_len={s} + "
+            f"steps={steps} > max_len={max_len}; decoding past capacity "
+            "would overwrite the last cache slot and corrupt output")
     logits, cache = serve_prefill(
         cfg, params, {"tokens": prompt, "frontend": frontend}
-        if frontend is not None else {"tokens": prompt})
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if frontend is not None else {"tokens": prompt}, max_len=max_len)
+    tok = sample_token(logits, None if key is None else jax.random.fold_in(key, 0),
+                       temperature=temperature, top_k=top_k)
     outs = [tok]
     step = jax.jit(lambda p, c, t: serve_step(cfg, p, c, t))
-    for _ in range(steps - 1):
+    for i in range(steps - 1):
         logits, cache = step(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = sample_token(
+            logits, None if key is None else jax.random.fold_in(key, i + 1),
+            temperature=temperature, top_k=top_k)
         outs.append(tok)
     return jnp.concatenate(outs, axis=1)

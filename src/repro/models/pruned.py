@@ -44,10 +44,14 @@ class PrunedModel:
                        for x in jax.tree.leaves(l.params)))
 
 
-def _attn_forward(cfg, lcfg: PrunedLayer, lp, x):
-    vcfg = cfg.replace(num_heads=lcfg.kv_groups * cfg.q_per_kv,
+def _vcfg(cfg, lcfg: PrunedLayer):
+    """Per-layer view config: head counts shrunk to this layer's survivors."""
+    return cfg.replace(num_heads=lcfg.kv_groups * cfg.q_per_kv,
                        num_kv_heads=lcfg.kv_groups)
-    out, _ = attn_mod.self_attention(vcfg, lp, x)
+
+
+def _attn_forward(cfg, lcfg: PrunedLayer, lp, x):
+    out, _ = attn_mod.self_attention(_vcfg(cfg, lcfg), lp, x)
     return out
 
 
@@ -149,3 +153,123 @@ def forward_pruned(pm: PrunedModel, tokens, frontend_embeds=None):
             x = x + _ffn_forward(cfg, lp["ffn"], h2)
     x = apply_norm(cfg, pm.globals_["final_norm"], x)
     return unembed(cfg, pm.globals_["embed"], pm.globals_.get("head", {}), x)
+
+
+# ----------------------------------------------------------------------
+# pruned decode runtime (serving)
+# ----------------------------------------------------------------------
+
+def _check_decodable(cfg):
+    if cfg.family == "ssm" or cfg.hybrid or cfg.encoder_decoder \
+            or cfg.cross_attn_every:
+        raise NotImplementedError(
+            "pruned decode runtime covers attention+FFN/MoE decoders only; "
+            f"family={cfg.family!r} hybrid={cfg.hybrid} "
+            f"enc-dec={cfg.encoder_decoder} needs the dense runtime")
+
+
+def init_cache_pruned(pm: PrunedModel, batch: int, max_len: int, dtype=None,
+                      *, per_slot: bool = False):
+    """Per-layer pruned KV cache: bytes follow the *shrunk* structure.
+
+    Dropped attention modules get ``None``; kept ones a (B, max_len,
+    kv_groups, head_dim) buffer — this is the cache-bytes win the serve
+    bench asserts.
+    """
+    from .transformer import init_cache
+    _check_decodable(pm.cfg)
+    kv_heads = [l.kv_groups if (l.kv_groups > 0 and "attn" in l.params) else 0
+                for l in pm.layers]
+    return init_cache(pm.cfg, batch, max_len, dtype, kv_heads=kv_heads,
+                      per_slot=per_slot)
+
+
+def kv_cache_bytes(pm: PrunedModel, batch: int, max_len: int,
+                   dtype=None) -> int:
+    """Exact byte footprint of ``init_cache_pruned``'s k/v buffers."""
+    itemsize = jnp.dtype(dtype or compute_dtype(pm.cfg)).itemsize
+    dh = pm.cfg.resolved_head_dim
+    return sum(2 * batch * max_len * l.kv_groups * dh * itemsize
+               for l in pm.layers
+               if l.kv_groups > 0 and "attn" in l.params)
+
+
+def prefill_pruned(pm: PrunedModel, tokens, max_len: int, *,
+                   full_logits: bool = False):
+    """Pruned prefill: full forward that also fills the per-layer KV cache.
+
+    Mirrors ``model.serve_prefill`` for the heterogeneous runtime. Returns
+    (last-position logits (B,1,V) — or all positions (B,S,V) with
+    ``full_logits=True``, for bucket-padded serving prefill — and the
+    cache) with ``cache["pos"]`` scalar; the serving engine re-homes rows
+    into per-slot caches itself.
+    """
+    cfg = pm.cfg
+    _check_decodable(cfg)
+    b, s = tokens.shape
+    if s > max_len:
+        raise RuntimeError(f"prompt_len={s} exceeds cache max_len={max_len}")
+    cache = init_cache_pruned(pm, b, max_len)
+    x = embed_tokens(cfg, pm.globals_["embed"], tokens)
+    for i, lcfg in enumerate(pm.layers):
+        lp = lcfg.params
+        if lcfg.kv_groups > 0 and "attn" in lp:
+            vcfg = _vcfg(cfg, lcfg)
+            h = apply_norm(cfg, lp["ln1"], x)
+            # recompute k/v for the cache; attention reuses them internally
+            _, k, v = attn_mod._project_qkv(vcfg, lp["attn"], h, h)
+            if cfg.pos_emb == "rope":
+                pos = jnp.arange(s)[None, :]
+                k = attn_mod.apply_rope(k, pos, cfg.rope_theta)
+            buf = cache["attn"][i]
+            cache["attn"][i] = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    buf["k"], k.astype(buf["k"].dtype), 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    buf["v"], v.astype(buf["v"].dtype), 0, axis=1),
+            }
+            a, _ = attn_mod.self_attention(vcfg, lp["attn"], h)
+            x = x + a
+        if lcfg.expert_ff:
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + _moe_forward(cfg, lcfg, lp["moe"], h2)
+        elif lcfg.d_ff > 0 and "ffn" in lp:
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + _ffn_forward(cfg, lp["ffn"], h2)
+    x = apply_norm(cfg, pm.globals_["final_norm"], x)
+    logits = unembed(cfg, pm.globals_["embed"], pm.globals_.get("head", {}), x)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return (logits if full_logits else logits[:, -1:]), cache
+
+
+def decode_step_pruned(pm: PrunedModel, cache, tokens):
+    """One-token decode over heterogeneous pruned layers (unrolled).
+
+    ``cache["pos"]`` scalar (lockstep) or (B,) per-slot vector, same
+    contract as ``transformer.decode_step``. Returns (logits, new_cache).
+    """
+    cfg = pm.cfg
+    pos = cache["pos"]
+    if cfg.pos_emb == "learned":
+        positions = pos[:, None] if jnp.ndim(pos) == 1 else pos[None]
+    else:
+        positions = None
+    x = embed_tokens(cfg, pm.globals_["embed"], tokens, positions=positions)
+    new_attn = list(cache["attn"])
+    for i, lcfg in enumerate(pm.layers):
+        lp = lcfg.params
+        if lcfg.kv_groups > 0 and "attn" in lp:
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, new_attn[i] = attn_mod.self_attention(
+                _vcfg(cfg, lcfg), lp["attn"], h,
+                cache=cache["attn"][i], cache_pos=pos)
+            x = x + a
+        if lcfg.expert_ff:
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + _moe_forward(cfg, lcfg, lp["moe"], h2)
+        elif lcfg.d_ff > 0 and "ffn" in lp:
+            h2 = apply_norm(cfg, lp["ln2"], x)
+            x = x + _ffn_forward(cfg, lp["ffn"], h2)
+    x = apply_norm(cfg, pm.globals_["final_norm"], x)
+    logits = unembed(cfg, pm.globals_["embed"], pm.globals_.get("head", {}), x)
+    return logits, {"pos": pos + 1, "attn": new_attn}

@@ -371,14 +371,41 @@ def _ring_cache(cfg, k, v):
 # decode
 # ----------------------------------------------------------------------
 
-def init_cache(cfg, batch: int, seq_len: int, dtype=None):
-    """Allocate decode caches for the whole stack."""
+def init_cache(cfg, batch: int, seq_len: int, dtype=None, *,
+               kv_heads=None, per_slot: bool = False):
+    """Allocate decode caches for the whole stack.
+
+    ``kv_heads``: optional per-layer KV-head counts (a sequence of length
+    ``num_layers``, e.g. ``[l.kv_groups for l in PrunedModel.layers]``) —
+    the cache is then a *list* of per-layer ``{k, v}`` buffers sized by the
+    pruned structure (``None`` for fully-dropped attention modules), so a
+    ZipLM-shrunk model pays KV-cache bytes only for the heads it kept.
+    The homogeneous ``decode_step`` scan consumes the stacked form; the
+    per-layer list form is consumed by the pruned serving runtime
+    (``models.pruned.decode_step_pruned``).
+
+    ``per_slot=True`` allocates a per-slot position vector ``pos: (B,)``
+    (continuous-batching serving) instead of the scalar lockstep position.
+    """
     dtype = dtype or compute_dtype(cfg)
-    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    pos0 = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    cache: Dict[str, Any] = {"pos": pos0}
     kind = block_kind(cfg)
     if kind != "ssm" and cfg.attention != "none":
-        cache["attn"] = attn_mod.init_kv_cache(cfg, batch, seq_len,
-                                               cfg.num_layers, dtype)
+        if kv_heads is not None:
+            if len(kv_heads) != cfg.num_layers:
+                raise ValueError(
+                    f"kv_heads has {len(kv_heads)} entries for "
+                    f"{cfg.num_layers} layers")
+            dh = cfg.resolved_head_dim
+            cache["attn"] = [
+                None if not h else
+                {"k": jnp.zeros((batch, seq_len, int(h), dh), dtype),
+                 "v": jnp.zeros((batch, seq_len, int(h), dh), dtype)}
+                for h in kv_heads]
+        else:
+            cache["attn"] = attn_mod.init_kv_cache(cfg, batch, seq_len,
+                                                   cfg.num_layers, dtype)
     if kind in ("ssm", "hybrid"):
         cache["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, cfg.num_layers, dtype)
     if cfg.encoder_decoder:
@@ -398,11 +425,19 @@ def init_cache(cfg, batch: int, seq_len: int, dtype=None):
 
 
 def decode_step(cfg, params, cache, tokens):
-    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), new_cache)."""
+    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), new_cache).
+
+    ``cache["pos"]`` is a scalar (lockstep batch) or a (B,) vector of
+    per-slot positions (continuous batching): each slot then embeds, RoPE-
+    rotates, writes and masks at its own absolute position.
+    """
     pos = cache["pos"]
-    x = constrain_batch(embed_tokens(
-        cfg, params["embed"], tokens,
-        positions=pos[None] if cfg.pos_emb == "learned" else None))
+    if cfg.pos_emb == "learned":
+        positions = pos[:, None] if jnp.ndim(pos) == 1 else pos[None]
+    else:
+        positions = None
+    x = constrain_batch(embed_tokens(cfg, params["embed"], tokens,
+                                     positions=positions))
     kind = block_kind(cfg)
 
     def body(x, lp):

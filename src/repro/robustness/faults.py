@@ -36,7 +36,7 @@ from .report import current_report
 
 SITES = ("calib.batch", "obs.cholesky", "db.artifact_write",
          "ckpt.async_write", "latency.measure", "kernel.pallas",
-         "spdy.batched_eval")
+         "spdy.batched_eval", "serve.step")
 MODES = ("raise", "oserror", "nan", "inf", "corrupt", "delay")
 
 

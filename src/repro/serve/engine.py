@@ -1,0 +1,402 @@
+"""Slot-based continuous-batching engine over jitted prefill/decode steps.
+
+See the package docstring (``repro.serve``) for the slot lifecycle and the
+cache sizing contract. Two model adapters share one engine:
+
+* :class:`DenseServeModel` — stock params, ``transformer.decode_step``
+  over the stacked homogeneous cache;
+* :class:`PrunedServeModel` — a ZipLM-shrunk :class:`PrunedModel`,
+  ``models.pruned.decode_step_pruned`` over the per-layer pruned cache
+  (KV bytes follow the shrunk structure).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_mod
+from ..models.pruned import (PrunedLayer, PrunedModel, _check_decodable,
+                             decode_step_pruned, init_cache_pruned,
+                             prefill_pruned)
+from ..models.transformer import decode_step, forward, init_cache
+from ..robustness import faults as _faults
+from ..robustness.report import current_report
+from .workload import Request
+
+_STEP_RETRIES = 4  # bounded serve.step retry budget per decode step
+
+
+def _bucket(s: int, max_len: int) -> int:
+    """Next power-of-two prompt bucket (>=8), capped at max_len — bounds
+    the number of prefill compilations under mixed prompt lengths."""
+    b = 8
+    while b < s:
+        b *= 2
+    return min(b, max_len)
+
+
+def _kv_bytes(cache) -> int:
+    """Total KV byte footprint of a slot cache (dense stack or pruned
+    per-layer list; ``None`` entries of dropped layers cost nothing)."""
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree.leaves(cache.get("attn")))
+
+
+class DenseServeModel:
+    """Engine adapter for stock (unpruned) params."""
+
+    def __init__(self, cfg, params, max_len: int):
+        if (not cfg.causal or cfg.attention != "full"
+                or cfg.frontend != "none"):
+            raise NotImplementedError(
+                "serving engine covers causal full-attention text decoders")
+        _check_decodable(cfg)
+        self.cfg, self.params, self.max_len = cfg, params, max_len
+        self._prefill_jit: Dict[int, Callable] = {}
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t))
+        self._insert = jax.jit(self._insert_impl)
+
+    def init_slots(self, nslots: int):
+        return init_cache(self.cfg, nslots, self.max_len, per_slot=True)
+
+    def prefill(self, tokens: np.ndarray):
+        """(s,) prompt -> (last-token logits (1,1,V), single-row cache).
+
+        Runs at the padded bucket length; rows past the true length hold
+        garbage k/v but are provably never attended (causal mask during
+        prefill; during decode every position <= pos has been overwritten
+        by a real token before the mask admits it).
+        """
+        cfg = self.cfg
+        s = int(tokens.shape[0])
+        bucket = _bucket(s, self.max_len)
+
+        if bucket not in self._prefill_jit:
+            def f(p, toks, last, _bucket=bucket):
+                out = forward(cfg, p, toks, mode="prefill")
+                cache = model_mod.assemble_prefill_cache(
+                    cfg, out, 1, _bucket, self.max_len)
+                logits = jax.lax.dynamic_slice_in_dim(out["logits"], last,
+                                                      1, axis=1)
+                return logits, cache
+            self._prefill_jit[bucket] = jax.jit(f)
+
+        padded = np.zeros((1, bucket), np.int64)
+        padded[0, :s] = tokens
+        return self._prefill_jit[bucket](self.params, jnp.asarray(padded),
+                                         jnp.asarray(s - 1, jnp.int32))
+
+    @staticmethod
+    def _insert_impl(cache, row, slot, pos):
+        return {
+            "pos": cache["pos"].at[slot].set(pos),
+            "attn": {
+                "k": cache["attn"]["k"].at[:, slot].set(row["attn"]["k"][:, 0]),
+                "v": cache["attn"]["v"].at[:, slot].set(row["attn"]["v"][:, 0]),
+            },
+        }
+
+    def insert(self, cache, row_cache, slot: int, pos: int):
+        return self._insert(cache, row_cache, jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(pos, jnp.int32))
+
+    def step(self, cache, tokens):
+        return self._step(self.params, cache, tokens)
+
+
+class PrunedServeModel:
+    """Engine adapter for a ZipLM-shrunk :class:`PrunedModel`."""
+
+    def __init__(self, pm: PrunedModel, max_len: int):
+        cfg = pm.cfg
+        if (not cfg.causal or cfg.attention != "full"
+                or cfg.frontend != "none"):
+            raise NotImplementedError(
+                "serving engine covers causal full-attention text decoders")
+        _check_decodable(cfg)
+        self.pm, self.cfg, self.max_len = pm, cfg, max_len
+        # jit over (layer params, globals, cache, tokens) pytrees; the
+        # static layer structure is rebuilt inside from host metadata so
+        # params are arguments, not baked-in constants
+        meta = [(l.kv_groups, l.d_ff, l.ssm_heads, tuple(l.expert_ff))
+                for l in pm.layers]
+
+        def rebuild(lps, globals_):
+            layers = [PrunedLayer(kv_groups=m[0], d_ff=m[1], ssm_heads=m[2],
+                                  expert_ff=list(m[3]), params=lp)
+                      for m, lp in zip(meta, lps)]
+            return PrunedModel(cfg=cfg, layers=layers, globals_=globals_)
+
+        def step_fn(lps, globals_, cache, toks):
+            return decode_step_pruned(rebuild(lps, globals_), cache, toks)
+
+        def prefill_fn(lps, globals_, toks, last):
+            logits, cache = prefill_pruned(rebuild(lps, globals_), toks,
+                                           max_len, full_logits=True)
+            logits = jax.lax.dynamic_slice_in_dim(logits, last, 1, axis=1)
+            return logits, cache
+
+        self._lps = [l.params for l in pm.layers]
+        self._globals = pm.globals_
+        self._step = jax.jit(step_fn)
+        self._prefill_jit: Dict[int, Callable] = {}
+        self._prefill_fn = prefill_fn
+        self._insert = jax.jit(self._insert_impl)
+
+    def init_slots(self, nslots: int):
+        return init_cache_pruned(self.pm, nslots, self.max_len,
+                                 per_slot=True)
+
+    def prefill(self, tokens: np.ndarray):
+        s = int(tokens.shape[0])
+        bucket = _bucket(s, self.max_len)
+        if bucket not in self._prefill_jit:
+            self._prefill_jit[bucket] = jax.jit(self._prefill_fn)
+        padded = np.zeros((1, bucket), np.int64)
+        padded[0, :s] = tokens
+        return self._prefill_jit[bucket](self._lps, self._globals,
+                                         jnp.asarray(padded),
+                                         jnp.asarray(s - 1, jnp.int32))
+
+    @staticmethod
+    def _insert_impl(cache, row, slot, pos):
+        attn = []
+        for buf, rbuf in zip(cache["attn"], row["attn"]):
+            if buf is None:
+                attn.append(None)
+            else:
+                attn.append({"k": buf["k"].at[slot].set(rbuf["k"][0]),
+                             "v": buf["v"].at[slot].set(rbuf["v"][0])})
+        return {"pos": cache["pos"].at[slot].set(pos), "attn": attn}
+
+    def insert(self, cache, row_cache, slot: int, pos: int):
+        return self._insert(cache, row_cache, jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(pos, jnp.int32))
+
+    def step(self, cache, tokens):
+        return self._step(self._lps, self._globals, cache, tokens)
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    steps: int
+    arrival: float
+    latency_class: str
+    tokens: List[int] = field(default_factory=list)
+    prefill_ms: float = 0.0
+    decode_step_ms: List[float] = field(default_factory=list)
+    finish: float = 0.0           # virtual seconds since stream start
+
+    @property
+    def latency_s(self) -> float:
+        """Queueing + service time of the whole request."""
+        return self.finish - self.arrival
+
+    @property
+    def decode_ms_per_token(self) -> float:
+        return float(np.mean(self.decode_step_ms)) \
+            if self.decode_step_ms else 0.0
+
+
+@dataclass
+class ServeReport:
+    records: List[RequestRecord]
+    wall_s: float                 # busy wall-clock (prefills + steps)
+    steps: int                    # decode steps executed
+    kv_cache_bytes: int
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.records)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-12)
+
+    def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
+        lats = [r.latency_s * 1e3 for r in self.records]
+        return {f"p{q}_ms": float(np.percentile(lats, q)) for q in qs}
+
+    @property
+    def prefill_ms_mean(self) -> float:
+        return float(np.mean([r.prefill_ms for r in self.records]))
+
+    @property
+    def decode_ms_per_token_mean(self) -> float:
+        return float(np.mean([r.decode_ms_per_token
+                              for r in self.records if r.decode_step_ms]))
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {"requests": len(self.records),
+             "total_tokens": self.total_tokens,
+             "tokens_per_s": self.tokens_per_s,
+             "wall_s": self.wall_s,
+             "prefill_ms_mean": self.prefill_ms_mean,
+             "decode_ms_per_token_mean": self.decode_ms_per_token_mean,
+             "kv_cache_bytes": self.kv_cache_bytes}
+        d.update(self.latency_percentiles())
+        return d
+
+
+class ServeEngine:
+    """Continuous batching over ``num_slots`` decode slots.
+
+    ``clock`` is injectable (tests script it) and is only read around jit
+    dispatches, so measured prefill/decode latencies are the compute, not
+    the host bookkeeping. Call :meth:`warmup` before timing runs so
+    reported latencies are warm (compiles excluded).
+    """
+
+    def __init__(self, model, num_slots: int = 4,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.model = model
+        self.num_slots = num_slots
+        self.clock = clock
+        self.cache = model.init_slots(num_slots)
+        self.kv_cache_bytes = _kv_bytes(self.cache)
+        self.max_len = model.max_len
+
+    def warmup(self, prompt_lens=(8,)):
+        """Compile the prefill buckets, the insert, and the decode step."""
+        for s in prompt_lens:
+            s = min(int(s), self.max_len - 1)
+            logits, row = self.model.prefill(np.zeros((s,), np.int64))
+            cache = self.model.insert(self.cache, row, 0, s)
+            toks = jnp.zeros((self.num_slots, 1), jnp.int32)
+            jax.block_until_ready(self.model.step(cache, toks)[0])
+        # warmup state is discarded; self.cache was never mutated
+
+    # ------------------------------------------------------------------
+    # fault-handled decode step (site: serve.step)
+    # ------------------------------------------------------------------
+
+    def _step_once(self, tokens: np.ndarray, active_slots: List[int]):
+        """One decode step with bounded retries.
+
+        The functional cache update makes recovery trivial: a detected
+        fault (injected raise/OSError, or non-finite logits on an active
+        slot from nan/inf poison) discards the candidate ``(logits,
+        cache)`` and recomputes from the untouched previous cache —
+        recovered runs are bit-identical to clean ones. ``delay`` faults
+        are absorbed into the measured step latency.
+        """
+        rep = current_report()
+        old_cache = self.cache
+        toks = jnp.asarray(tokens.reshape(-1, 1), jnp.int32)
+        for attempt in range(_STEP_RETRIES):
+            try:
+                mult = _faults.poison_scalar("serve.step")
+            except _faults.INJECTED:
+                rep.count("detected", "serve.step")
+                rep.count("retries", "serve.step")
+                continue
+            logits, new_cache = self.model.step(old_cache, toks)
+            if mult != 1.0:
+                logits = logits * mult
+            lg = np.asarray(logits)
+            if not np.isfinite(lg[active_slots]).all():
+                rep.count("detected", "serve.step")
+                rep.count("retries", "serve.step")
+                continue
+            if attempt:
+                rep.count("recovered", "serve.step")
+            self.cache = new_cache
+            return lg
+        raise RuntimeError(
+            f"serve.step produced unusable output {_STEP_RETRIES} times "
+            "in a row — fault is not transient")
+
+    # ------------------------------------------------------------------
+    # the serving loop
+    # ------------------------------------------------------------------
+
+    def run(self, requests: List[Request]) -> ServeReport:
+        """Serve a request stream to completion; returns per-request and
+        aggregate metrics.
+
+        Time is virtual: it advances by the measured wall-clock of each
+        prefill/decode dispatch and fast-forwards across idle gaps to the
+        next arrival, so a seeded Poisson stream yields deterministic
+        tokens and reproducible latency structure.
+        """
+        for r in requests:
+            if r.prompt_len + r.steps > self.max_len:
+                raise RuntimeError(
+                    f"request {r.rid} overflows the KV cache: prompt_len="
+                    f"{r.prompt_len} + steps={r.steps} > max_len="
+                    f"{self.max_len}; decoding past capacity would "
+                    "overwrite the last cache slot and corrupt output")
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        records = {r.rid: RequestRecord(
+            rid=r.rid, prompt_len=r.prompt_len, steps=r.steps,
+            arrival=r.arrival, latency_class=r.latency_class)
+            for r in requests}
+        free = list(range(self.num_slots - 1, -1, -1))
+        active: Dict[int, RequestRecord] = {}
+        last_tok = np.zeros(self.num_slots, np.int64)
+        remaining: Dict[int, int] = {}
+        t = 0.0
+        busy = 0.0
+        nsteps = 0
+
+        while pending or active:
+            # admit arrived requests into free slots (prefill + insert)
+            while pending and free and pending[0].arrival <= t:
+                req = pending.pop(0)
+                slot = free.pop()
+                t0 = self.clock()
+                logits, row = self.model.prefill(req.tokens)
+                self.cache = self.model.insert(self.cache, row, slot,
+                                               req.prompt_len)
+                tok = int(np.argmax(np.asarray(logits), axis=-1)[0, 0])
+                dt = self.clock() - t0
+                t += dt
+                busy += dt
+                rec = records[req.rid]
+                rec.prefill_ms = dt * 1e3
+                rec.tokens.append(tok)
+                last_tok[slot] = tok
+                if req.steps > 1:
+                    active[slot] = rec
+                    remaining[slot] = req.steps - 1
+                else:
+                    rec.finish = t
+                    free.append(slot)
+
+            if not active:
+                if pending:
+                    t = max(t, pending[0].arrival)
+                continue
+
+            # one batched decode step over all slots
+            slots = sorted(active)
+            t0 = self.clock()
+            lg = self._step_once(last_tok, slots)
+            dt = self.clock() - t0
+            t += dt
+            busy += dt
+            nsteps += 1
+            for slot in slots:
+                tok = int(np.argmax(lg[slot, 0]))
+                rec = active[slot]
+                rec.tokens.append(tok)
+                rec.decode_step_ms.append(dt * 1e3)
+                last_tok[slot] = tok
+                remaining[slot] -= 1
+                if remaining[slot] == 0:
+                    rec.finish = t
+                    del active[slot]
+                    del remaining[slot]
+                    free.append(slot)
+
+        return ServeReport(records=[records[r.rid] for r in requests],
+                           wall_s=busy, steps=nsteps,
+                           kv_cache_bytes=self.kv_cache_bytes)

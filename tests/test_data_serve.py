@@ -5,8 +5,10 @@ import numpy as np
 import pytest
 
 from repro.data import calibration_batches, synthetic_stream
-from repro.data.synthetic import synthetic_tokens
-from repro.models import generate, model_init, serve_prefill, serve_step
+from repro.data.synthetic import make_batch_np, synthetic_tokens
+from repro.models import (generate, make_batch, model_init, serve_prefill,
+                          serve_step)
+from repro.models.layers import compute_dtype
 
 
 def test_stream_deterministic(tiny_cfg):
@@ -31,6 +33,23 @@ def test_stream_learnable_structure(tiny_cfg):
 def test_calibration_sample_count(tiny_cfg):
     batches = calibration_batches(tiny_cfg, 20, 32, batch=8)
     assert sum(b["tokens"].shape[0] for b in batches) == 20
+
+
+@pytest.mark.parametrize("frontend", ["audio_stub", "vision_stub"])
+def test_frontend_batch_dtype_unified(tiny_cfg, frontend):
+    """Both batch builders must emit frontend features in the model's
+    COMPUTE dtype. Pre-fix, ``make_batch_np`` used raw ``cfg.dtype`` —
+    on a mixed-precision config (fp32 master params, low-precision
+    compute) that's not even a valid jnp dtype, and the two builders
+    disagreed."""
+    cfg = tiny_cfg.replace(frontend=frontend, num_frontend_tokens=8,
+                           frontend_dim=16, dtype="mixed_bfloat16")
+    want = compute_dtype(cfg)
+    assert want == jnp.bfloat16
+    b_np = make_batch_np(cfg, 2, 16, seed=0)
+    b_rand = make_batch(cfg, jax.random.key(0), 2, 16)
+    assert b_np["frontend"].dtype == want
+    assert b_rand["frontend"].dtype == want
 
 
 def test_generate_shapes_and_determinism(tiny_cfg, tiny_params):

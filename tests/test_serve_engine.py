@@ -1,0 +1,268 @@
+"""Continuous-batching serving engine: exactness vs the sequential
+oracle, cache-sizing contract, pruned KV accounting, family routing,
+metric attribution, and fault recovery at ``serve.step``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.latency import build_table
+from repro.core.magnitude import baseline_database, uniform_assignment
+from repro.core.shrink import kv_cache_plan, shrink, shrink_from_stitched
+from repro.data import synthetic_stream
+from repro.models import generate
+from repro.models.pruned import (decode_step_pruned, kv_cache_bytes,
+                                 prefill_pruned)
+from repro.robustness import (FaultPlan, RobustnessReport, install,
+                              report_scope)
+from repro.runtime.costmodel import InferenceEnv
+from repro.serve import (CLASS_SPEEDUP, DenseServeModel, FamilyServer,
+                         PrunedServeModel, Request, ServeEngine,
+                         synthetic_requests)
+
+MAX_LEN = 48
+
+
+def _requests(cfg, n=6, seed=3, steps_range=(3, 8)):
+    return synthetic_requests(cfg, n, seed=seed, rate=300.0,
+                              prompt_lens=(5, 9, 13),
+                              steps_range=steps_range)
+
+
+@pytest.fixture(scope="module")
+def dense_engine(tiny_cfg, tiny_params):
+    eng = ServeEngine(DenseServeModel(tiny_cfg, tiny_params, MAX_LEN),
+                      num_slots=2)
+    eng.warmup((8, 16))
+    return eng
+
+
+@pytest.fixture(scope="module")
+def mag_db(tiny_cfg, tiny_params):
+    return baseline_database(tiny_cfg, tiny_params, kind="magnitude")
+
+
+def _half_heads_assignment(tiny_cfg, mag_db):
+    """Keep half the KV heads in every attention module, full FFN."""
+    a = {}
+    for l in range(tiny_cfg.num_layers):
+        name = f"L{l}.attn"
+        levels = mag_db[name].levels
+        want = tiny_cfg.num_kv_heads // 2      # remove half the groups
+        assert want in levels, (want, levels)
+        a[name] = int(want)
+        a[f"L{l}.ffn"] = 0
+    return a
+
+
+# ----------------------------------------------------------------------
+# engine == sequential generate (the no-leakage / no-corruption oracle)
+# ----------------------------------------------------------------------
+
+def test_engine_matches_sequential_generate(tiny_cfg, tiny_params,
+                                            dense_engine):
+    """Staggered arrivals, mixed prompt lengths, and slot reuse (6
+    requests through 2 slots) produce exactly the tokens each request
+    would get alone through ``generate``."""
+    reqs = _requests(tiny_cfg)
+    assert len({r.prompt_len for r in reqs}) > 1
+    report = dense_engine.run(reqs)
+    assert report.steps > 0
+    for req, rec in zip(reqs, report.records):
+        ref = generate(tiny_cfg, tiny_params, req.tokens[None, :],
+                       steps=req.steps, max_len=MAX_LEN)
+        assert rec.tokens == list(np.asarray(ref[0])), f"rid={req.rid}"
+        assert rec.finish >= rec.arrival
+
+
+def test_engine_rejects_cache_overflow(tiny_cfg, dense_engine):
+    bad = Request(rid=0, tokens=np.zeros(40, np.int64),
+                  steps=MAX_LEN - 40 + 1, arrival=0.0)
+    with pytest.raises(RuntimeError, match="overflows the KV cache"):
+        dense_engine.run([bad])
+
+
+# ----------------------------------------------------------------------
+# satellite: generate cache sizing (pre-fix: silent write-index clamp)
+# ----------------------------------------------------------------------
+
+def test_generate_default_cache_fits_generation(tiny_cfg, tiny_params):
+    """Pre-fix, ``serve_prefill``'s ``2*s`` default sized the cache at 8
+    for a 4-token prompt, so step 5+ silently clamped the write index and
+    corrupted every later token. The default must fit s + steps."""
+    prompt = next(synthetic_stream(tiny_cfg, 1, 4))["tokens"]
+    out_default = generate(tiny_cfg, tiny_params, prompt, steps=20)
+    out_roomy = generate(tiny_cfg, tiny_params, prompt, steps=20,
+                         max_len=64)
+    np.testing.assert_array_equal(out_default, out_roomy)
+
+
+def test_generate_raises_on_explicit_overflow(tiny_cfg, tiny_params):
+    prompt = next(synthetic_stream(tiny_cfg, 1, 4))["tokens"]
+    with pytest.raises(RuntimeError, match="overflows the KV cache"):
+        generate(tiny_cfg, tiny_params, prompt, steps=20, max_len=8)
+
+
+# ----------------------------------------------------------------------
+# satellite: sampling (pre-fix: key= was accepted and ignored)
+# ----------------------------------------------------------------------
+
+def test_generate_sampling_uses_the_key(tiny_cfg, tiny_params):
+    prompt = next(synthetic_stream(tiny_cfg, 2, 8))["tokens"]
+    greedy = generate(tiny_cfg, tiny_params, prompt, steps=8)
+    k0 = jax.random.key(0)
+    s0a = generate(tiny_cfg, tiny_params, prompt, steps=8, key=k0,
+                   temperature=2.0)
+    s0b = generate(tiny_cfg, tiny_params, prompt, steps=8, key=k0,
+                   temperature=2.0)
+    s1 = generate(tiny_cfg, tiny_params, prompt, steps=8,
+                  key=jax.random.key(1), temperature=2.0)
+    np.testing.assert_array_equal(s0a, s0b)    # same key reproduces
+    assert not np.array_equal(s0a, s1)         # different key differs
+    assert not np.array_equal(s0a, greedy)     # pre-fix: all were greedy
+
+
+def test_generate_topk1_is_greedy(tiny_cfg, tiny_params):
+    prompt = next(synthetic_stream(tiny_cfg, 2, 8))["tokens"]
+    greedy = generate(tiny_cfg, tiny_params, prompt, steps=6)
+    topk1 = generate(tiny_cfg, tiny_params, prompt, steps=6,
+                     key=jax.random.key(7), top_k=1)
+    np.testing.assert_array_equal(greedy, topk1)
+
+
+# ----------------------------------------------------------------------
+# pruned members: stitched shrink, decode oracle, KV byte accounting
+# ----------------------------------------------------------------------
+
+def test_shrink_from_stitched_matches_shrink(tiny_cfg, tiny_params,
+                                             mag_db):
+    from repro.core.database import SnapshotCache
+    a = _half_heads_assignment(tiny_cfg, mag_db)
+    ref = shrink(tiny_cfg, tiny_params, mag_db, a)
+    stitched = SnapshotCache(tiny_cfg, mag_db).apply(tiny_params, a)
+    dev = shrink_from_stitched(tiny_cfg, stitched, mag_db, a)
+    for lr, ld in zip(ref.layers, dev.layers):
+        assert lr.kv_groups == ld.kv_groups and lr.d_ff == ld.d_ff
+        for (pr, pd) in zip(jax.tree.leaves(lr.params),
+                            jax.tree.leaves(ld.params)):
+            np.testing.assert_array_equal(np.asarray(pr), np.asarray(pd))
+    for gr, gd in zip(jax.tree.leaves(ref.globals_),
+                      jax.tree.leaves(dev.globals_)):
+        np.testing.assert_array_equal(np.asarray(gr), np.asarray(gd))
+
+
+def test_pruned_engine_matches_sequential_decode(tiny_cfg, tiny_params,
+                                                 mag_db):
+    a = _half_heads_assignment(tiny_cfg, mag_db)
+    pm = shrink(tiny_cfg, tiny_params, mag_db, a)
+    eng = ServeEngine(PrunedServeModel(pm, MAX_LEN), num_slots=2)
+    eng.warmup((8, 16))
+    reqs = _requests(tiny_cfg, n=4, seed=11)
+    report = eng.run(reqs)
+    for req, rec in zip(reqs, report.records):
+        logits, cache = prefill_pruned(pm, jnp.asarray(req.tokens[None]),
+                                       MAX_LEN)
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(req.steps - 1):
+            logits, cache = decode_step_pruned(
+                pm, cache, jnp.asarray([[toks[-1]]], jnp.int32))
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        assert rec.tokens == toks, f"rid={req.rid}"
+
+
+def test_pruned_cache_bytes_match_shrunk_structure(tiny_cfg, tiny_params,
+                                                   mag_db, dense_engine):
+    a = _half_heads_assignment(tiny_cfg, mag_db)
+    pm = shrink(tiny_cfg, tiny_params, mag_db, a)
+    eng = ServeEngine(PrunedServeModel(pm, MAX_LEN), num_slots=2)
+    plan = kv_cache_plan(tiny_cfg, mag_db, a)
+    assert plan == [tiny_cfg.num_kv_heads // 2] * tiny_cfg.num_layers
+    itemsize = jnp.dtype(jnp.float32).itemsize
+    expect = sum(2 * 2 * MAX_LEN * h * tiny_cfg.head_dim * itemsize
+                 for h in plan)
+    assert eng.kv_cache_bytes == expect
+    assert eng.kv_cache_bytes == kv_cache_bytes(pm, 2, MAX_LEN)
+    assert eng.kv_cache_bytes < dense_engine.kv_cache_bytes
+    assert eng.kv_cache_bytes == dense_engine.kv_cache_bytes // 2
+
+
+# ----------------------------------------------------------------------
+# family server: routing + partitioned serving
+# ----------------------------------------------------------------------
+
+def test_family_routing_and_run(tiny_cfg, tiny_params, mag_db):
+    table = build_table(tiny_cfg, InferenceEnv(batch=2, seq=32,
+                                               mode="prefill"),
+                        backend="costmodel")
+    assignments = {t: uniform_assignment(tiny_cfg, table, t)
+                   for t in (1.5, 2.0)}
+    srv = FamilyServer(tiny_cfg, tiny_params, mag_db, assignments,
+                       max_len=32, num_slots=2)
+    assert srv.route("relaxed") == 1.0   # dense: best quality qualifies
+    assert srv.route("standard") == 1.5  # smallest target meeting 1.5x
+    assert srv.route("strict") == 2.0
+    srv.warmup((8,))
+    reqs = synthetic_requests(tiny_cfg, 6, seed=2, rate=300.0,
+                              prompt_lens=(5, 9), steps_range=(2, 5))
+    reports = srv.run(reqs)
+    assert sum(len(r.records) for r in reports.values()) == len(reqs)
+    for target, rep in reports.items():
+        for rec in rep.records:
+            assert srv.route(rec.latency_class) == target
+
+
+# ----------------------------------------------------------------------
+# metric attribution (injected clock) + fault recovery (serve.step)
+# ----------------------------------------------------------------------
+
+def test_metrics_attribute_prefill_and_decode_separately(tiny_cfg,
+                                                         tiny_params):
+    """With a scripted clock ticking 1 ms per reading, every prefill and
+    every decode step must account exactly one tick — compile time and
+    host bookkeeping never leak into either number."""
+    ticks = iter(range(10**6))
+
+    def clock():
+        return next(ticks) * 1e-3
+
+    eng = ServeEngine(DenseServeModel(tiny_cfg, tiny_params, MAX_LEN),
+                      num_slots=2, clock=clock)
+    eng.warmup((8, 16))
+    report = eng.run(_requests(tiny_cfg, n=3, seed=5))
+    for rec in report.records:
+        assert rec.prefill_ms == pytest.approx(1.0)
+        for dms in rec.decode_step_ms:
+            assert dms == pytest.approx(1.0)
+
+
+@pytest.mark.chaos
+def test_serve_step_faults_recover_bit_identical(tiny_cfg, tiny_params):
+    reqs = _requests(tiny_cfg, n=3, seed=9)
+    clean = ServeEngine(DenseServeModel(tiny_cfg, tiny_params, MAX_LEN),
+                        num_slots=2)
+    clean.warmup((8, 16))
+    ref = clean.run(reqs)
+
+    faulty = ServeEngine(DenseServeModel(tiny_cfg, tiny_params, MAX_LEN),
+                         num_slots=2)
+    faulty.warmup((8, 16))
+    rep = RobustnessReport()
+    plan = FaultPlan.parse("serve.step:raise@0,serve.step:nan@2")
+    with install(plan), report_scope(rep):
+        out = faulty.run(reqs)
+    for a, b in zip(ref.records, out.records):
+        assert a.tokens == b.tokens
+    assert rep.counts["detected"].get("serve.step", 0) == 2
+    assert rep.counts["retries"].get("serve.step", 0) == 2
+    assert rep.counts["recovered"].get("serve.step", 0) == 2
+
+
+@pytest.mark.chaos
+def test_serve_step_persistent_fault_raises(tiny_cfg, tiny_params):
+    eng = ServeEngine(DenseServeModel(tiny_cfg, tiny_params, MAX_LEN),
+                      num_slots=2)
+    eng.warmup((8,))
+    plan = FaultPlan.parse("serve.step:nan@0x100")
+    with install(plan), report_scope(RobustnessReport()):
+        with pytest.raises(RuntimeError, match="not transient"):
+            eng.run(_requests(tiny_cfg, n=2, seed=1))
