@@ -58,6 +58,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.checkpoint.manager import atomic_write_json
 from repro.configs import BERT_BASE, GPT2_SMALL
 from repro.configs.base import TrainConfig
 from repro.core.database import (SnapshotCache, apply_assignment,
@@ -406,6 +407,17 @@ def _bench_db_setup():
     return _STATE["db_bench"]
 
 
+# Every top-level key any bench may write to BENCH_db.json. The
+# analysis suite (ast.bench-key-drift) checks this two-way against the
+# _write_bench_db call sites, so adding a bench means declaring its key
+# here — drift is a reviewed diff, not a silent new record.
+BENCH_KEYS = (
+    "db_build", "db_build_compact", "spdy_eval", "spdy_search",
+    "calib_shard", "latency_cache", "gradual_family",
+    "gradual_family_smoke", "chaos", "chaos_smoke", "serve", "serve_smoke",
+)
+
+
 def _write_bench_db(update: dict):
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_db.json")
     rec = {}
@@ -413,9 +425,7 @@ def _write_bench_db(update: dict):
         with open(path) as f:
             rec = json.load(f)
     rec.update(update)
-    with open(path, "w") as f:
-        json.dump(rec, f, indent=2, sort_keys=True)
-        f.write("\n")
+    atomic_write_json(path, rec)
 
 
 def bench_db_build():

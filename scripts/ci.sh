@@ -9,6 +9,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+echo "== static analysis (jaxpr/HLO/Pallas/AST budgets) =="
+python -m repro.analysis --check
+
 echo "== tier-1 =="
 python -m pytest -x -q
 

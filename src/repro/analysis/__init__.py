@@ -1,0 +1,110 @@
+"""Static-analysis suite: the repo's performance invariants as CI gates.
+
+``python -m repro.analysis --check`` traces/compiles the six production
+hot entry points, audits every Pallas kernel abstractly, lints the
+source tree, compiles the sharded paths on a forced 2-device mesh, and
+compares everything against the committed budgets under
+``results/analysis/``. Any error-severity finding fails CI. The full
+machine-readable run lands in ``ANALYSIS_report.json`` next to
+``BENCH_db.json``.
+
+Layers
+------
+
+* :mod:`repro.analysis.jaxpr_audit` — walk the ClosedJaxpr + compiled
+  HLO of a jitted entry point (:mod:`repro.analysis.entry_points` holds
+  the six production entries).
+* :mod:`repro.analysis.collectives_audit` — collective schedules of the
+  mesh-sharded paths on a forced multi-device subprocess.
+* :mod:`repro.analysis.pallas_audit` — kernel/reference-twin contracts,
+  grid coverage, TPU tile alignment; abstract eval only, nothing runs.
+* :mod:`repro.analysis.astlint` — source-level repo invariants.
+
+Rule catalog
+------------
+
+===========================  ============================================
+rule                         meaning
+===========================  ============================================
+jaxpr.host-callback          host callback primitive reachable from a hot
+                             entry (error if inside a scan/while body —
+                             one device->host sync per iteration)
+jaxpr.large-const            closed-over constant > 16 KiB baked into the
+                             executable; pass it as a jit argument
+jaxpr.undonated              buffer declared in donate_argnums that the
+                             compiled module did not alias to an output
+jaxpr.weak-type              weakly-typed input/const (python scalar
+                             leakage) forking the jit cache per literal
+budget.exact / .regression   committed budget comparisons (any change /
+  / .band / .stale /         increase / out-of-band ratio / improvement
+  .missing                   to refresh / no budget committed yet)
+collectives.schedule         per-kind collective instruction count drifted
+                             from the committed schedule (diff included)
+pallas.twin-missing/-drift   `_run_guarded` op without a registered
+                             kernel/reference twin, or registry drift
+pallas.signature             kernel and reference twin disagree on the
+                             shared positional signature
+pallas.abstract-mismatch     kernel and reference differ in output
+                             shape/dtype under jax.eval_shape
+pallas.tile-alignment        BlockSpec tile not (8, 128)-aligned and not
+                             a declared masked-tail kernel
+pallas.grid-coverage         grid x index_map does not tile the full
+                             array (rows computed never / twice)
+pallas.interpret-hardcoded   `interpret=` literal in a pallas_call (must
+                             thread the caller's flag)
+ast.host-sync-in-loop        float()/.item()/np.asarray() in a loop
+                             body of core/ or serve hot files without a
+                             `# sync:` annotation
+ast.linalg-inv               jnp.linalg.inv outside the allowlisted
+                             frozen-seed baselines (use Cholesky)
+ast.tmp-literal              bare "/tmp" path literal (use tempfile)
+ast.atomic-writer            raw json.dump / np.savez persistence outside
+                             checkpoint/manager.py (use atomic_write_json)
+ast.fault-site-drift         robustness.faults.SITES vs fault-injection
+                             call sites, two-way
+ast.bench-key-drift          benchmarks BENCH_KEYS vs _write_bench_db
+                             record keys, two-way
+===========================  ============================================
+
+Sync annotations
+----------------
+
+An intentional, reviewed device->host synchronization is annotated at
+the call site (same line, or the contiguous comment block directly
+above) with::
+
+    # sync: <why this pull is intentional / amortized>
+
+e.g. ``core/oneshot.py``'s "THE one host pull per SPDY eval round".
+Unannotated syncs in hot files are errors; the annotation is the review
+record, not an escape hatch — keep the reason accurate.
+
+Allowlist format
+----------------
+
+AST-rule exceptions live in ``astlint.ALLOWLIST`` as
+``Allow(path_suffix, match, reason)``: the rule is suppressed in files
+whose path ends with ``path_suffix`` when the offending source line
+contains ``match`` (``match=None`` covers the whole file). Every entry
+carries its justification string — e.g. ``jnp.linalg.inv`` in
+``core/database.py`` stays because the frozen-seed baseline snapshots
+are bit-compared against it.
+
+Budget files
+------------
+
+Committed under ``results/analysis/`` and refreshed only via
+``python -m repro.analysis --update-budgets`` (reviewed diff, never
+auto-rewritten by the gate):
+
+* ``jaxpr_budget.json`` — ``{"entries": {entry: {counter: n, ...,
+  ratio_lo/ratio_hi: x}}}``; hazard counters (host callbacks, large
+  consts, weak types, unconsumed donations) budget as maxima, the
+  jaxpr-vs-HLO FLOP ratio and the prefill latency cross-check as
+  ``[lo, hi]`` bands.
+* ``collectives_budget.json`` — ``{"metrics": {"entry.kind": n},
+  "schedules": {entry: [[kind, shape], ...]}}``; counts match exactly,
+  failures print the schedule diff.
+* ``pallas_budget.json`` / ``ast_budget.json`` — violation counters per
+  rule (``count.<rule>``), budget as maxima (they should only shrink).
+"""

@@ -1,0 +1,204 @@
+"""Collective-schedule audit of the sharded entry points.
+
+Compiles the repo's mesh-sharded hot paths on a forced multi-device host
+platform (same ``run_forced_devices`` harness as the tier-2 sharding
+tests) and extracts the **collective schedule** — the ordered list of
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-
+permute instructions in the compiled HLO, with their result shapes —
+plus per-kind instruction counts.
+
+The counts are budgeted *exactly* (``results/analysis/collectives_
+budget.json``): an extra all-gather that GSPMD silently inserts after a
+sharding-rule regression is a real perf cliff at scale even though every
+numerical test still passes, so a count change fails CI and the failure
+message carries a schedule diff (which collective appeared/vanished,
+with shapes) rather than a bare number.
+
+Audited entries:
+
+* ``train_step_fsdp``      — ``train.train_step.jit_train_step`` on a
+  2-device pure-FSDP data mesh (grad reduce-scatter / param all-gather
+  schedule).
+* ``hessian_step_sharded`` — ``core.hessian._fused_step_sharded``
+  (per-device capture forward + psum-reduced X^T X accumulators).
+* ``spdy_batched_eval``    — the population-vmapped calibration loss;
+  it is replicated work by construction, so its budget is *zero*
+  collectives and any nonzero count means device chatter crept into the
+  SPDY search inner loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+from repro.analysis.findings import Finding
+from repro.runtime.hlo_analysis import analyze_hlo_text
+
+N_DEVICES = 2
+
+ENTRY_NAMES = ("train_step_fsdp", "hessian_step_sharded",
+               "spdy_batched_eval")
+
+
+def collective_schedule(hlo_text: str, total_devices: int
+                        ) -> Tuple[Dict[str, int], List[List[str]]]:
+    """(per-kind instruction counts, ordered [kind, result-shape] list)
+    for one compiled module, loop bodies walked like the cost model."""
+    costs = analyze_hlo_text(hlo_text, total_devices)
+    sched = [[kind, shape] for (kind, _wire, shape) in costs.coll_detail]
+    counts: Dict[str, int] = {}
+    for kind, _ in sched:
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts, sched
+
+
+def schedule_diff(want: List[List[str]], got: List[List[str]]) -> str:
+    """Human-readable diff of two collective schedules."""
+    lines = []
+    n = max(len(want), len(got))
+    for i in range(n):
+        w = want[i] if i < len(want) else None
+        g = got[i] if i < len(got) else None
+        if w == g:
+            lines.append(f"    {i:3d}  {g[0]:<20} {g[1]}")
+        else:
+            if w is not None:
+                lines.append(f"  - {i:3d}  {w[0]:<20} {w[1]}")
+            if g is not None:
+                lines.append(f"  + {i:3d}  {g[0]:<20} {g[1]}")
+    return "\n".join(lines) if lines else "    <no collectives>"
+
+
+# The forced-device child: compile (never execute) each sharded entry
+# point and print per-entry schedules as the RESULT line. Tiny config —
+# the schedule depends on sharding rules and jit structure, not shapes.
+SUBPROC_SCRIPT = r"""
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.collectives_audit import collective_schedule
+from repro.configs import GPT2_SMALL
+from repro.configs.base import TrainConfig
+from repro.core.hessian import _fused_step_sharded
+from repro.core.structures import registry
+from repro.data.synthetic import calibration_batches, make_batch_np
+from repro.distributed.activation import activation_context
+from repro.distributed.sharding import make_mesh, mesh_config_for
+from repro.models import model_init
+from repro.train.train_step import make_train_state, jit_train_step
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+
+ndev = jax.device_count()
+out = {"devices": ndev, "entries": {}}
+mesh = make_mesh((ndev,), ("data",))
+mc = mesh_config_for(mesh)
+params, specs = model_init(TINY, jax.random.key(0))
+
+
+def record(name, text):
+    counts, sched = collective_schedule(text, ndev)
+    out["entries"][name] = {"counts": counts, "schedule": sched}
+
+
+# --- train_step_fsdp ---------------------------------------------------
+tcfg = TrainConfig(warmup_steps=2, total_steps=10, microbatches=2)
+state = make_train_state(TINY, params, tcfg)
+batch = jax.tree.map(jnp.asarray, make_batch_np(TINY, 8, 32, seed=3))
+step = jit_train_step(TINY, tcfg, mesh, mc, state, specs, batch)
+record("train_step_fsdp",
+       step.trace(state, batch).lower().compile().as_text())
+
+# --- hessian_step_sharded ---------------------------------------------
+mods = registry(TINY)
+hessians = {m.name: jnp.zeros((m.d_in, m.d_in), jnp.float32)
+            for m in mods}
+counts_acc = {m.name: jnp.zeros((), jnp.float32) for m in mods}
+tokens = jnp.asarray(make_batch_np(TINY, 8, 32, seed=0)["tokens"])
+hstep = _fused_step_sharded(TINY, False, mesh, ("data",))
+with activation_context(None, None):
+    text = hstep.trace(hessians, counts_acc, params, tokens, None,
+                       jnp.float32(1.0)).lower().compile().as_text()
+record("hessian_step_sharded", text)
+
+# --- spdy_batched_eval (replicated: budget is zero collectives) -------
+from repro.core.database import SnapshotCache
+from repro.core.magnitude import baseline_database
+from repro.core.oneshot import batched_calib_loss_fn
+
+db = baseline_database(TINY, params, kind="magnitude")
+cache = SnapshotCache(TINY, db)
+batches = calibration_batches(TINY, 16, 64, batch=8)
+loss_b = batched_calib_loss_fn(TINY, batches, cache.batch_axes(params))
+a = {}
+for l in range(TINY.num_layers):
+    a["L%d.attn" % l] = TINY.num_kv_heads // 2
+    a["L%d.ffn" % l] = 0
+pb = cache.apply_batched(params, [a, dict(a)])
+record("spdy_batched_eval",
+       loss_b._jitted.trace(loss_b._stacked, pb)
+       .lower().compile().as_text())
+
+print("RESULT" + json.dumps(out))
+"""
+
+
+def audit_collectives(n_devices: int = N_DEVICES, *, timeout: float = 600
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Compile the sharded entries on ``n_devices`` forced host devices.
+
+    Returns ``(metrics, schedules)``: metrics are flat
+    ``{entry}.{kind}`` instruction counts plus ``{entry}.n_collectives``
+    totals (budgeted exactly by the CLI); schedules map entry name to
+    the ordered ``[kind, shape]`` list (stored in the report and used
+    for the failure diff).
+    """
+    from repro.launch.subproc import run_forced_devices
+    out = run_forced_devices(SUBPROC_SCRIPT, n_devices, timeout=timeout)
+    metrics: Dict[str, Any] = {"devices": out["devices"]}
+    schedules: Dict[str, Any] = {}
+    for entry, rec in out["entries"].items():
+        schedules[entry] = rec["schedule"]
+        total = 0
+        for kind, n in sorted(rec["counts"].items()):
+            metrics[f"{entry}.{kind}"] = int(n)
+            total += int(n)
+        metrics[f"{entry}.n_collectives"] = total
+    return metrics, schedules
+
+
+def check_against_budget(metrics: Dict[str, Any],
+                         schedules: Dict[str, Any],
+                         budget: Dict[str, Any]) -> List[Finding]:
+    """Exact-match the per-kind counts; mismatches carry a schedule diff.
+
+    ``budget`` is the committed ``collectives_budget.json`` content:
+    ``{"metrics": {...}, "schedules": {entry: [[kind, shape], ...]}}``.
+    """
+    findings: List[Finding] = []
+    want_m = budget.get("metrics", {})
+    want_s = budget.get("schedules", {})
+    keys = sorted(set(want_m) | set(metrics))
+    for k in keys:
+        if k == "devices":
+            continue
+        w, g = want_m.get(k, 0), metrics.get(k, 0)
+        if w == g:
+            continue
+        entry = k.split(".", 1)[0]
+        diff = schedule_diff(want_s.get(entry, []),
+                             schedules.get(entry, []))
+        findings.append(Finding(
+            rule="collectives.schedule", severity="error",
+            where=f"collectives:{entry}",
+            message=(f"collective count changed for `{k}`: budget {w}, "
+                     f"compiled {g} — a sharding-rule or jit-structure "
+                     "change altered the GSPMD schedule. Diff "
+                     "(budget -> compiled):\n" + diff + "\nIf intended, "
+                     "re-commit budgets with "
+                     "`python -m repro.analysis --update-budgets`"),
+            detail={"key": k, "budget": w, "got": g}))
+    return findings

@@ -1,0 +1,127 @@
+"""Common result types for the static-analysis suite.
+
+A :class:`Finding` is one rule violation (or informational note) with a
+stable machine-readable shape; an :class:`AnalysisReport` aggregates the
+findings and per-entry-point metrics of one full run and serializes to
+the JSON report written next to ``BENCH_db.json``.
+
+Severities:
+
+* ``error`` — fails ``python -m repro.analysis --check`` (CI gate);
+* ``warning`` — surfaced, never fails the gate (e.g. a metric that came
+  in *under* budget: the budget file should be refreshed, but the code
+  did not regress);
+* ``info`` — telemetry (counts, cross-check ratios).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclass
+class Finding:
+    rule: str                      # e.g. "jaxpr.host-callback"
+    severity: str                  # error | warning | info
+    where: str                     # "path:line" or an entry-point name
+    message: str                   # one actionable sentence
+    detail: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"bad severity {self.severity!r}")
+
+    def as_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.rule} @ {self.where}: {self.message}"
+
+
+@dataclass
+class AnalysisReport:
+    """One full-suite run: per-entry metrics + all findings."""
+
+    metrics: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    findings: List[Finding] = field(default_factory=list)
+    budgets_checked: List[str] = field(default_factory=list)
+
+    def extend(self, fs: List[Finding]):
+        self.findings.extend(fs)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "metrics": self.metrics,
+            "findings": [f.as_dict() for f in self.findings],
+            "budgets_checked": sorted(self.budgets_checked),
+            "n_errors": len(self.errors),
+        }
+
+
+def compare_to_budget(name: str, metrics: Dict[str, Any],
+                      budget: Optional[Dict[str, Any]],
+                      exact_keys=(), max_keys=(), band_keys=()
+                      ) -> List[Finding]:
+    """Generic budget comparison for one entry point.
+
+    * ``exact_keys`` — any change fails (collective schedules, matmul
+      counts: both directions are reviewable events);
+    * ``max_keys`` — an increase fails, a decrease is a warning to
+      refresh the budget (hazard counters that should only shrink);
+    * ``band_keys`` — metric must land inside the committed
+      ``[key + "_lo", key + "_hi"]`` band (cross-check ratios).
+    """
+    out: List[Finding] = []
+    if budget is None:
+        out.append(Finding(
+            rule="budget.missing", severity="error", where=name,
+            message=(f"no committed budget for entry point {name!r}; run "
+                     "`python -m repro.analysis --update-budgets` and "
+                     "commit results/analysis/"),
+        ))
+        return out
+    for k in exact_keys:
+        got, want = metrics.get(k), budget.get(k)
+        if got != want:
+            out.append(Finding(
+                rule="budget.exact", severity="error", where=name,
+                message=(f"{k} changed: budget={want!r} now={got!r} — if "
+                         "intentional, re-commit with --update-budgets"),
+                detail={"key": k, "budget": want, "now": got}))
+    for k in max_keys:
+        got, want = metrics.get(k, 0), budget.get(k, 0)
+        if got is None or want is None:
+            continue
+        if got > want:
+            out.append(Finding(
+                rule="budget.regression", severity="error", where=name,
+                message=(f"{k} regressed: {want} budgeted, now {got} — a "
+                         "new hazard entered this hot path"),
+                detail={"key": k, "budget": want, "now": got}))
+        elif got < want:
+            out.append(Finding(
+                rule="budget.stale", severity="warning", where=name,
+                message=(f"{k} improved ({want} -> {got}); refresh the "
+                         "budget with --update-budgets"),
+                detail={"key": k, "budget": want, "now": got}))
+    for k in band_keys:
+        got = metrics.get(k)
+        lo, hi = budget.get(k + "_lo"), budget.get(k + "_hi")
+        if got is None or lo is None or hi is None:
+            continue
+        if not (lo <= got <= hi):
+            out.append(Finding(
+                rule="budget.band", severity="error", where=name,
+                message=(f"{k}={got:.4g} outside committed band "
+                         f"[{lo:.4g}, {hi:.4g}]"),
+                detail={"key": k, "lo": lo, "hi": hi, "now": got}))
+    return out

@@ -69,9 +69,12 @@ def _prune_healed(prune_fn, Ws, Hraw, *, group_size, n_remove, levels,
             res = prune_fn(Ws, Hinv, group_size=group_size,
                            n_remove=n_remove, levels=levels,
                            use_kernel=uk)
+            # sync: DB materialization — the float16 snapshots are
+            # fetched exactly once per chunk per damping rung, and the
+            # finite check below reads values headed to host anyway
             snaps16 = np.asarray(res.snapshots.astype(jnp.float16))
-            errs = np.asarray(res.errors)
-            orders = np.asarray(res.order)
+            errs = np.asarray(res.errors)   # sync: same fetch
+            orders = np.asarray(res.order)  # sync: same fetch
         except Exception as e:
             if not uk or isinstance(e, KeyboardInterrupt):
                 raise
@@ -196,11 +199,13 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
                     n_remove=max(levels), levels=levels,
                     use_kernel=use_kernel, damp=damp)
                 bases = module_drop_errors(Ws, Hraw)
+                # sync: one transfer per chunk (see _prune_healed note)
                 bases = np.asarray(bases, np.float64)
-                lv = np.asarray(levels)
+                lv = np.asarray(levels)  # sync: host level grid, no device
                 for i, m in enumerate(chunk):
                     db[m.name] = _finish_module_db(
-                        m, lv, snaps16[i], errs[i], float(bases[i]),
+                        m, lv, snaps16[i], errs[i],
+                        float(bases[i]),  # sync: bases already on host
                         orders[i])
         db = {m.name: db[m.name] for m in mods}  # registry order
     if verbose:
@@ -265,13 +270,14 @@ class SnapshotCache:
         self._groups: Dict[tuple, dict] = {}
         by_key: Dict[tuple, List[ModuleDB]] = {}
         for mdb in db.values():
+            # sync: mdb.levels is host metadata (numpy), built once
             key = (mdb.mod.kind, tuple(np.asarray(mdb.levels).tolist()))
             by_key.setdefault(key, []).append(mdb)
         for (kind, levels), mdbs in by_key.items():
             self._groups[(kind, levels)] = {
                 "kind": kind,
                 "names": [m.mod.name for m in mdbs],
-                "levels": np.asarray(levels),
+                "levels": np.asarray(levels),  # sync: host metadata
                 "layer_idx": jnp.asarray([m.mod.layer for m in mdbs],
                                          jnp.int32),
                 "expert_idx": jnp.asarray([m.mod.expert for m in mdbs],

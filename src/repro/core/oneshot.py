@@ -79,10 +79,17 @@ def _grouped_mean_loss(cfg, stacked, params):
 
 
 def calib_loss_fn(cfg, batches):
+    # the eval batches enter the jit as ARGUMENTS, not closure constants:
+    # closed-over arrays are baked into every compiled executable (one
+    # copy per jit cache entry), which repro.analysis flags as
+    # jaxpr.large-const
     stacked = _stack_batch_groups(batches)
-    _loss = jax.jit(lambda params: _grouped_mean_loss(cfg, stacked, params))
+    _inner = jax.jit(lambda st, params: _grouped_mean_loss(cfg, st, params))
+    _loss = lambda params: _inner(stacked, params)
     fn = lambda params: float(_loss(params))
     fn._jitted = _loss  # exposed for trace-size regression tests
+    fn._jitted_inner = _inner   # (stacked, params) -> loss, no baked data
+    fn._stacked = stacked
     return fn
 
 
@@ -90,13 +97,19 @@ def batched_calib_loss_fn(cfg, batches, axes):
     """Vmapped calibration loss over a population-stacked param tree.
 
     ``axes`` is the `SnapshotCache.batch_axes` tree (0 on stitched leaves,
-    None elsewhere).  Returns a jitted fn: params_batched -> (P,) losses,
-    device-resident until the caller syncs.
+    None elsewhere).  Returns a fn: params_batched -> (P,) losses,
+    device-resident until the caller syncs. The eval batches are jit
+    arguments (see calib_loss_fn); ``fn._jitted`` exposes the underlying
+    (stacked, params_batched) executable for the analysis suite.
     """
     stacked = _stack_batch_groups(batches)
-    return jax.jit(jax.vmap(
-        lambda params: _grouped_mean_loss(cfg, stacked, params),
-        in_axes=(axes,)))
+    _inner = jax.jit(jax.vmap(
+        lambda st, params: _grouped_mean_loss(cfg, st, params),
+        in_axes=(None, axes)))
+    fn = lambda pb: _inner(stacked, pb)
+    fn._jitted = _inner
+    fn._stacked = stacked
+    return fn
 
 
 def make_batched_eval(cfg, params, cache: SnapshotCache, batches,
@@ -128,6 +141,8 @@ def make_batched_eval(cfg, params, cache: SnapshotCache, batches,
             padded = min(1 << (k - 1).bit_length(), chunk)
             part = part + [part[0]] * (padded - k)
             pb = cache.apply_batched(params, part)
+            # sync: THE one host pull per SPDY eval round — the invariant
+            # repro.analysis budgets (PR 4); keep it the only one
             out[lo:lo + k] = np.asarray(loss_b(pb), np.float64)[:k]
         return out
 

@@ -196,9 +196,10 @@ def _tree_digest(tree, max_elems: int = 4096) -> str:
         h.update(str((shape, str(getattr(leaf, "dtype", type(leaf))))
                      ).encode())
         if size <= max_elems:
-            h.update(np.asarray(leaf).tobytes())
+            h.update(np.asarray(leaf).tobytes())  # sync: fingerprint pull
         else:
             stride = -(-size // max_elems)
+            # sync: strided sample pull, bounded by max_elems per leaf
             h.update(np.asarray(jnp.ravel(leaf)[::stride]).tobytes())
     return h.hexdigest()[:16]
 
@@ -306,6 +307,7 @@ def _save_db(path: str, db: Dict[str, ModuleDB]) -> str:
     arrs = {}
     for name, mdb in db.items():
         for f in _DB_FIELDS:
+            # sync: artifact persistence — DB fields are host numpy
             arrs[f"{name}::{f}"] = np.asarray(getattr(mdb, f))
         arrs[f"{name}::base_norm"] = np.float64(mdb.base_norm)
     return _save_artifact(path, arrs)
@@ -327,6 +329,7 @@ def _load_db(cfg, path: str, expected_sha: Optional[str] = None
             continue
         kw = {f: data[f"{mod.name}::{f}"] for f in _DB_FIELDS}
         out[mod.name] = ModuleDB(
+            # sync: npz payload, host data
             mod=mod, base_norm=float(data[f"{mod.name}::base_norm"]), **kw)
     return out
 
@@ -549,7 +552,9 @@ def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
                 out.append(GradualVariant(
                     target=target, achieved=res.speedup,
                     assignment=res.assignment, params=current, pruned=pm,
+                    # sync: manifest floats, host data
                     loss_before_ft=float(entry["loss_before_ft"]),
+                    # sync: manifest floats, host data
                     loss_after_ft=float(entry["loss_after_ft"])))
                 if verbose:
                     print(f"[gradual] {target}x restored (stage done)")
@@ -566,7 +571,7 @@ def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
             res = _result_from(entry)
             masked = apply_assignment(cfg, current, db, res.assignment,
                                       cache=cache)
-            loss_before = float(entry["loss_before_ft"])
+            loss_before = float(entry["loss_before_ft"])  # sync: manifest
         else:
             if loss_b is None:
                 loss_b = batched_calib_loss_fn(cfg, calib_batches[:1],

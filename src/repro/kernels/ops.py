@@ -36,7 +36,12 @@ def _default_interpret() -> bool:
 
 def _run_guarded(op: str, kernel_thunk, ref_thunk):
     """Run the Pallas path unless this op's breaker is open; on failure
-    trip the breaker and fall back to the jnp reference oracle."""
+    trip the breaker and fall back to the jnp reference oracle.
+
+    Every op name guarded here must have a matching entry in the
+    ``repro.analysis.pallas_audit`` registry (signature / output-aval /
+    grid contracts of the kernel-ref twin are CI-checked); the two-way
+    drift check fails the analysis gate otherwise."""
     rep = current_report()
     key = f"kernel.pallas:{op}"
     if rep.breaker_open(key):

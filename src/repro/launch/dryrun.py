@@ -227,8 +227,8 @@ def main(argv=None):
                            "traceback": traceback.format_exc()}
                     failures.append(tag)
                     print(f"  FAIL: {e}", flush=True)
-                with open(path, "w") as f:
-                    json.dump(rec, f, indent=1)
+                from repro.checkpoint.manager import atomic_write_json
+                atomic_write_json(path, rec)
     if failures:
         print("FAILURES:", failures)
         return 1

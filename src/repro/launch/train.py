@@ -30,7 +30,10 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory; defaults to a fresh "
+                         "tempfile.mkdtemp so concurrent runs can't "
+                         "collide")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced same-family config")
@@ -47,6 +50,10 @@ def main(argv=None):
     from ..distributed.sharding import make_mesh, mesh_config_for
     from ..models import model_init
     from ..train.trainer import Trainer
+
+    if args.ckpt_dir is None:
+        import tempfile
+        args.ckpt_dir = tempfile.mkdtemp(prefix="repro_train_")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     print(f"[train] {cfg.name}: {cfg.num_params()/1e6:.1f}M params, "

@@ -34,6 +34,10 @@ from typing import Dict, List, Optional
 
 from .report import current_report
 
+# Drift-checked two-way against the injection call sites by
+# `repro.analysis.astlint.check_fault_sites` (CI gate): adding a site
+# here without a `hit`/`poison_*`/`corrupt_file` caller — or vice
+# versa — fails `python -m repro.analysis --check`.
 SITES = ("calib.batch", "obs.cholesky", "db.artifact_write",
          "ckpt.async_write", "latency.measure", "kernel.pallas",
          "spdy.batched_eval", "serve.step")

@@ -239,6 +239,9 @@ class Costs:
     coll_bytes: float = 0.0          # ring-model wire bytes
     coll_bytes_raw: float = 0.0      # plain operand-size sum (spec formula)
     coll_ops: Dict[str, float] = field(default_factory=dict)
+    # (kind, wire_bytes, result_type) per collective instruction, in
+    # walk order — `repro.analysis.collectives_audit` budgets this as
+    # the collective schedule, so keep the ordering deterministic
     coll_detail: List = field(default_factory=list)
 
     def add(self, other: "Costs", mult: float = 1.0):

@@ -271,6 +271,7 @@ class ServeEngine:
             logits, row = self.model.prefill(np.zeros((s,), np.int64))
             cache = self.model.insert(self.cache, row, 0, s)
             toks = jnp.zeros((self.num_slots, 1), jnp.int32)
+            # sync: warmup barrier — wait for each bucket's compile
             jax.block_until_ready(self.model.step(cache, toks)[0])
         # warmup state is discarded; self.cache was never mutated
 
@@ -301,6 +302,8 @@ class ServeEngine:
             logits, new_cache = self.model.step(old_cache, toks)
             if mult != 1.0:
                 logits = logits * mult
+            # sync: one pull per decode step — greedy sampling and the
+            # serve.step finite check both need host logits anyway
             lg = np.asarray(logits)
             if not np.isfinite(lg[active_slots]).all():
                 rep.count("detected", "serve.step")
@@ -356,6 +359,8 @@ class ServeEngine:
                 logits, row = self.model.prefill(req.tokens)
                 self.cache = self.model.insert(self.cache, row, slot,
                                                req.prompt_len)
+                # sync: one pull per admission — the first token gates
+                # whether the request enters the decode batch at all
                 tok = int(np.argmax(np.asarray(logits), axis=-1)[0, 0])
                 dt = self.clock() - t0
                 t += dt
