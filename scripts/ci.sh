@@ -24,6 +24,9 @@ python -m pytest -m chaos -q
 echo "== gradual_family smoke bench =="
 python benchmarks/run.py gradual_family --smoke
 
+echo "== family_sharded smoke bench (device-parallel bit-identity) =="
+python benchmarks/run.py family_sharded --smoke
+
 echo "== chaos smoke bench =="
 python benchmarks/run.py chaos --smoke
 

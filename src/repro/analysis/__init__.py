@@ -1,6 +1,6 @@
 """Static-analysis suite: the repo's performance invariants as CI gates.
 
-``python -m repro.analysis --check`` traces/compiles the six production
+``python -m repro.analysis --check`` traces/compiles the production
 hot entry points, audits every Pallas kernel abstractly, lints the
 source tree, compiles the sharded paths on a forced 2-device mesh, and
 compares everything against the committed budgets under
@@ -13,7 +13,7 @@ Layers
 
 * :mod:`repro.analysis.jaxpr_audit` — walk the ClosedJaxpr + compiled
   HLO of a jitted entry point (:mod:`repro.analysis.entry_points` holds
-  the six production entries).
+  the production entries).
 * :mod:`repro.analysis.collectives_audit` — collective schedules of the
   mesh-sharded paths on a forced multi-device subprocess.
 * :mod:`repro.analysis.pallas_audit` — kernel/reference-twin contracts,

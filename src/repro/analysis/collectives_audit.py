@@ -25,6 +25,15 @@ Audited entries:
   it is replicated work by construction, so its budget is *zero*
   collectives and any nonzero count means device chatter crept into the
   SPDY search inner loop.
+* ``db_build_sharded``     — ``core.obs._sharded_prune_jit`` (the
+  shard_map'ed Algorithm-1 database build); module groups are
+  embarrassingly parallel across the mesh, so its budget is *zero*
+  collectives — any nonzero count means the sharded build started
+  paying cross-device latency per chunk.
+* ``spdy_eval_placed``     — the same population-vmapped loss compiled
+  against inputs committed to a non-default device (the per-device SPDY
+  population placement of ``spdy.search_family``); the zero-collective
+  budget must survive placement.
 """
 from __future__ import annotations
 
@@ -36,7 +45,8 @@ from repro.runtime.hlo_analysis import analyze_hlo_text
 N_DEVICES = 2
 
 ENTRY_NAMES = ("train_step_fsdp", "hessian_step_sharded",
-               "spdy_batched_eval")
+               "spdy_batched_eval", "db_build_sharded",
+               "spdy_eval_placed")
 
 
 def collective_schedule(hlo_text: str, total_devices: int
@@ -141,6 +151,28 @@ pb = cache.apply_batched(params, [a, dict(a)])
 record("spdy_batched_eval",
        loss_b._jitted.trace(loss_b._stacked, pb)
        .lower().compile().as_text())
+
+# --- spdy_eval_placed (same loss, inputs committed off-default) -------
+dev = jax.devices()[-1]
+record("spdy_eval_placed",
+       loss_b._jitted.trace(jax.device_put(loss_b._stacked, dev),
+                            jax.device_put(pb, dev))
+       .lower().compile().as_text())
+
+# --- db_build_sharded (embarrassingly parallel: zero collectives) -----
+from repro.core.obs import _sharded_prune_jit
+
+rng = np.random.default_rng(0)
+d_in = mods[0].d_in
+W = jnp.asarray(rng.standard_normal((2, d_in, d_in)), jnp.float32)
+X = rng.standard_normal((2, 3 * d_in, d_in))
+Hinv = jnp.asarray(np.linalg.inv(
+    np.einsum("bni,bnj->bij", X, X) / X.shape[1]
+    + 1e-2 * np.eye(d_in)), jnp.float32)
+sharded = _sharded_prune_jit(mesh, ("data",), mods[0].group_size, 2,
+                             (0, 1, 2), False, None, False, 0.75, 64, 16)
+record("db_build_sharded",
+       sharded.trace(W, Hinv).lower().compile().as_text())
 
 print("RESULT" + json.dumps(out))
 """

@@ -1,4 +1,4 @@
-"""The six audited hot entry points.
+"""The audited hot entry points.
 
 Each entry builds a *tiny but structurally faithful* instance of one of
 the repo's production hot paths — same jit structure, same donation
@@ -19,6 +19,11 @@ Entries (names are the budget keys in ``results/analysis/jaxpr_budget
 * ``obs.batched_step``     — the vmapped OBS pruning step
   (``core.obs.prune_structured_batched``), traced through its
   ``static_argnames``.
+* ``obs.sharded_step``     — the shard_map'ed Algorithm-1 database
+  build (``core.obs._sharded_prune_jit``) on a 1-device mesh: same jit
+  structure (pad -> shard_map(vmap) -> slice) as the multi-device
+  build, audited for the same hazards; its cross-device collective
+  budget lives in the collectives audit (``db_build_sharded``).
 * ``spdy.batched_eval``    — the population-vmapped calibration loss
   behind ``oneshot.make_batched_eval`` (the one host sync per SPDY
   round); the calibration batches must enter as jit *arguments*, so a
@@ -130,6 +135,21 @@ def entry_obs_batched_step() -> EntryResult:
                     levels=(8, 16), use_kernel=False))
 
 
+def entry_obs_sharded_step() -> EntryResult:
+    from repro.core.obs import _sharded_prune_jit
+    from repro.distributed.sharding import make_mesh
+    key = jax.random.key(1)
+    L, d_in, d_out, gs = 2, 128, 64, 4
+    W = jax.random.normal(key, (L, d_in, d_out), jnp.float32)
+    X = jax.random.normal(jax.random.key(2), (L, 256, d_in), jnp.float32)
+    H = jnp.einsum("lni,lnj->lij", X, X) + 1e-3 * jnp.eye(d_in)
+    Hinv = jnp.linalg.pinv(H)
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    jitted = _sharded_prune_jit(mesh, ("data",), gs, d_in // gs // 2,
+                                (8, 16), False, None, False, 0.75, 64, 16)
+    return audit_jitted("obs.sharded_step", jitted, (W, Hinv))
+
+
 def entry_spdy_batched_eval() -> EntryResult:
     from repro.core.oneshot import batched_calib_loss_fn
     from repro.data.synthetic import calibration_batches
@@ -216,6 +236,7 @@ def entry_train_step() -> EntryResult:
 ENTRIES: Dict[str, Callable[[], EntryResult]] = {
     "hessian.fused_step": entry_hessian_fused_step,
     "obs.batched_step": entry_obs_batched_step,
+    "obs.sharded_step": entry_obs_sharded_step,
     "spdy.batched_eval": entry_spdy_batched_eval,
     "shrink.stitched": entry_shrink_stitched,
     "serve.prefill": entry_serve_prefill,

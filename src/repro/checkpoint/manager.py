@@ -2,8 +2,11 @@
 
 * atomic: write to ``step_XXXX.tmp`` then ``os.replace`` + manifest with a
   content hash — a killed writer can never corrupt the latest checkpoint;
-* async: a background thread drains a queue of host-side snapshots, so the
-  training loop is only blocked for the device->host copy;
+* async: a background thread drains a *bounded* queue (``max_queue``) of
+  host-side snapshots and pre-serialized artifact blobs
+  (:meth:`CheckpointManager.submit_blob`), so the training loop is only
+  blocked for the device->host copy — or on backpressure when the disk
+  falls ``max_queue`` items behind;
 * mesh-agnostic restore: leaves are stored as full host arrays and re-placed
   with the *target* shardings — restoring to a different mesh shape
   (elastic rescale) is the same code path;
@@ -95,6 +98,29 @@ def atomic_save_npz(path: str, arrays: Dict[str, np.ndarray]) -> str:
     return h.hexdigest()
 
 
+def npz_bytes(arrays: Dict[str, np.ndarray]) -> tuple:
+    """Serialize ``arrays`` to in-memory npz bytes; returns
+    ``(data, sha256)``.  ``np.savez`` to a BytesIO is deterministic, so
+    the digest recorded *before* an async enqueue is exactly the digest
+    of the bytes that later hit disk — the streamed-artifact integrity
+    contract of ``CheckpointManager.submit_blob``."""
+    import io
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    data = buf.getvalue()
+    return data, hashlib.sha256(data).hexdigest()
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Write raw bytes via pid-unique tmp + ``os.replace`` (same contract
+    as :func:`atomic_write_json`)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
 def save_pytree(tree, path: str) -> str:
     """Atomic synchronous save. Returns the manifest hash."""
     return atomic_save_npz(path, _flatten(tree))
@@ -120,11 +146,17 @@ def restore_pytree(template, path: str, shardings=None):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    """``max_queue`` bounds the async queue depth: a producer streaming
+    npz artifacts faster than the disk drains them blocks on ``put``
+    (backpressure) instead of accumulating unboundedly in host memory.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True, max_queue: int = 8):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._q: "queue.Queue" = queue.Queue()
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_queue)
         self._async = async_save
         self._worker: Optional[threading.Thread] = None
         self._errors: list = []
@@ -142,9 +174,23 @@ class CheckpointManager:
     def save(self, step: int, tree, blocking: bool = False):
         host = _flatten(tree)  # device->host copy happens here
         if self._async and not blocking:
-            self._q.put((step, host, tree))
+            self._q.put(("ckpt", step, host))
         else:
             self._write(step, host)
+
+    def submit_blob(self, path: str, data: bytes, *,
+                    site: str = "db.artifact_write"):
+        """Queue pre-serialized bytes (see :func:`npz_bytes`) for an
+        atomic async write to ``path`` — the family pipeline's stage
+        artifacts stream through here.  The caller records the sha256 of
+        ``data`` before enqueueing; a write that fails after bounded
+        retries surfaces from ``wait()``/``close()``, and a kill while
+        the blob is mid-flight leaves either nothing or a tmp file
+        (``os.replace`` atomicity), never a torn artifact."""
+        if self._async:
+            self._q.put(("blob", path, data, site))
+        else:
+            self._write_blob(path, data, site)
 
     def _drain(self):
         while True:
@@ -152,8 +198,12 @@ class CheckpointManager:
             try:
                 if item is None:
                     return
-                step, host, _ = item
-                self._write(step, host)
+                if item[0] == "blob":
+                    _, path, data, site = item
+                    self._write_blob(path, data, site)
+                else:
+                    _, step, host = item
+                    self._write(step, host)
             except Exception as e:
                 self._errors.append(e)
             finally:
@@ -161,6 +211,13 @@ class CheckpointManager:
                 # not return while a checkpoint is mid-flight (the old
                 # empty()-polling wait raced exactly there)
                 self._q.task_done()
+
+    def _write_blob(self, path: str, data: bytes, site: str):
+        _, rule = _retry_io(lambda: atomic_write_bytes(path, data),
+                            site=site)
+        if rule is not None and rule.mode == "corrupt":
+            plan = _faults.active_plan()
+            _faults.corrupt_bytes(path, seed=plan.seed if plan else 0)
 
     def _write(self, step: int, host: Dict[str, np.ndarray]):
         path = self._ckpt_path(step)

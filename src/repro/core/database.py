@@ -17,6 +17,7 @@ module kind instead of ~|modules| host->device transfers.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -29,7 +30,8 @@ from ..robustness.healing import damp_schedule
 from ..robustness.report import current_report
 from .obs import (build_hessian, module_drop_error, module_drop_errors,
                   prune_structured, prune_structured_batched,
-                  prune_structured_batched_compact, prune_structured_compact)
+                  prune_structured_batched_compact, prune_structured_compact,
+                  prune_structured_sharded)
 from .structures import (PrunableModule, get_matrix, level_grid, registry,
                          set_matrix)
 
@@ -162,8 +164,8 @@ def group_modules(cfg, params, mods: List[PrunableModule]
 def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
                    damp: float = 1e-4, verbose: bool = False,
                    batched: bool = True, use_kernel: bool = False,
-                   compact: bool = False,
-                   max_batch: int = 16) -> Dict[str, ModuleDB]:
+                   compact: bool = False, max_batch: int = 16,
+                   mesh=None, shard_axes=None) -> Dict[str, ModuleDB]:
     """max_batch bounds how many modules of one shape group run under a
     single vmap, capping device memory at max_batch x (Hinv + snapshot
     stack) instead of the whole group (L, or L*E for MoE).
@@ -172,9 +174,21 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
     core (obs.prune_structured[_batched]_compact): identical pruning
     orders, snapshots scattered back to original row layout before
     ``_finish_module_db``, ~the live set's bandwidth instead of the dense
-    (d_in, d_in) downdate per step."""
+    (d_in, d_in) downdate per step.
+
+    ``mesh`` (with >1 device over ``shard_axes``, default the mesh's
+    data axes) shards each vmapped chunk across devices via
+    obs.prune_structured_sharded — module groups are embarrassingly
+    parallel, so results stay bit-identical to the single-device build
+    (the equivalence reference, and the demotion target of the
+    ``db.sharded_group`` circuit breaker)."""
+    from ..distributed.sharding import axis_size, data_axes_for
     mods = registry(cfg)
     db: Dict[str, ModuleDB] = {}
+    rep = current_report()
+    if mesh is not None and shard_axes is None:
+        shard_axes = data_axes_for(mesh)
+    n_shards = axis_size(mesh, shard_axes) if mesh is not None else 1
     if not batched:
         for mod in mods:
             db[mod.name] = build_module_db(cfg, params, mod,
@@ -183,6 +197,9 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
     else:
         prune_batched = (prune_structured_batched_compact if compact
                          else prune_structured_batched)
+        prune_sharded = functools.partial(
+            prune_structured_sharded, mesh=mesh, axes=shard_axes,
+            compact=compact)
         for key, gmods in group_modules(cfg, params, mods):
             gs, n, _, levels = key
             for lo in range(0, len(gmods), max_batch):
@@ -194,10 +211,28 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
                 # one host transfer per chunk (float16), not per module;
                 # _prune_healed retries the chunk up the damping ladder
                 # (and without the kernel) on non-finite results
-                snaps16, errs, orders = _prune_healed(
-                    prune_batched, Ws, Hraw, group_size=gs,
-                    n_remove=max(levels), levels=levels,
-                    use_kernel=use_kernel, damp=damp)
+                snaps16 = None
+                if n_shards > 1 and not rep.breaker_open("db.sharded_group"):
+                    try:
+                        _faults.hit("db.sharded_group")
+                        snaps16, errs, orders = _prune_healed(
+                            prune_sharded, Ws, Hraw, group_size=gs,
+                            n_remove=max(levels), levels=levels,
+                            use_kernel=use_kernel, damp=damp)
+                    except KeyboardInterrupt:
+                        raise
+                    except Exception as e:
+                        # demotion rung: sharded build -> single-device
+                        # vmapped build (the bit-exact reference), once
+                        # per report via the circuit breaker
+                        rep.trip("db.sharded_group",
+                                 reason=f"sharded db chunk: {e!r}")
+                        snaps16 = None
+                if snaps16 is None:
+                    snaps16, errs, orders = _prune_healed(
+                        prune_batched, Ws, Hraw, group_size=gs,
+                        n_remove=max(levels), levels=levels,
+                        use_kernel=use_kernel, damp=damp)
                 bases = module_drop_errors(Ws, Hraw)
                 # sync: one transfer per chunk (see _prune_healed note)
                 bases = np.asarray(bases, np.float64)
@@ -289,6 +324,22 @@ class SnapshotCache:
     def covers(self, assignment: Dict[str, int]) -> bool:
         return all(n in assignment
                    for e in self._groups.values() for n in e["names"])
+
+    def to_device(self, device) -> "SnapshotCache":
+        """A replica of the cache with every device-resident array
+        (snapshot stacks, index vectors) committed to ``device``.  JAX
+        refuses computations over mixed committed placements, so
+        per-device SPDY population placement gives each device its own
+        replica; host metadata is shared."""
+        new = object.__new__(SnapshotCache)
+        new.cfg = self.cfg
+        new._groups = {}
+        for key, e in self._groups.items():
+            ne = dict(e)
+            for k in ("layer_idx", "expert_idx", "snaps"):
+                ne[k] = jax.device_put(e[k], device)
+            new._groups[key] = ne
+        return new
 
     def apply(self, params, assignment: Dict[str, int]):
         """Device-side equivalent of apply_assignment for a full

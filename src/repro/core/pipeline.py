@@ -75,13 +75,53 @@ recovered counts, circuit-breaker demotions, retries, quarantined
 paths) is dumped into the manifest under ``"robustness"`` even when
 the run is preempted or crashes mid-stage. A fault-free run under
 this layer is bit-identical to one without it.
+
+Overlapped scheduler & async artifact streaming
+-----------------------------------------------
+The family loop is a strict dependency chain per target —
+hessians(i) -> db(i) -> search(i) -> finetune(i) — and search(i+1)
+re-calibrates on the *post-finetune* params of target i, so stages of
+consecutive targets cannot be reordered. What CAN overlap is target i's
+**export tail**: the final loss eval, ``params.npz`` serialization,
+shrink and variant assembly only *read* the finished params tree.  With
+``overlap=True`` (the default) that tail runs on a background thread
+concurrent with target i+1's hessians/db/search/finetune; at most one
+export is in flight, and every computation in the tail is deterministic
+and reads only immutable state, so the produced variants, manifest
+payloads and artifacts are bit-identical to the serial
+(``overlap=False``) schedule.
+
+Stage artifacts (``hessians.npz``/``db.npz``/``params.npz``) stream
+through a :class:`~repro.checkpoint.manager.CheckpointManager` bounded
+async queue: bytes are serialized and sha256'd on the producing thread
+(:func:`~repro.checkpoint.manager.npz_bytes` is deterministic, so the
+digest recorded in the manifest *before* enqueue equals the digest of
+the file that later hits disk — the PR-6 integrity/quarantine contract
+is unchanged), then written atomically by the worker.  Write failures
+surface as :class:`~repro.checkpoint.manager.CheckpointWriteError` at
+the next durability barrier.  Barriers (export join + queue drain) run
+before every ``FamilyPreempted`` raise and at family completion, so
+``stop_after=`` leaves exactly the durable state of a serial run
+stopped at the same point, and the manifest never gets *ahead* of disk
+across a barrier.  One kill-window exception is handled on resume: a
+hard kill can durably record a target as "done" while its streamed
+``params.npz`` is still queued — the done-restore path detects the
+missing/corrupt file and rolls that target back to its ``search``
+stage, where the recorded search result plus trainer checkpoints
+repair it deterministically.  Each stage record carries a
+``stage_times`` payload (seconds per stage, ``export`` = the tail) so
+benchmarks can attribute wall-time to hessians/db/search/finetune
+under either schedule.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import sys
 import tempfile
+import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Union
 
@@ -89,8 +129,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint.manager import (atomic_save_npz, atomic_write_json,
-                                  load_json, restore_pytree, save_pytree)
+from ..checkpoint.manager import (CheckpointManager, CheckpointWriteError,
+                                  _flatten, atomic_save_npz,
+                                  atomic_write_json, load_json, npz_bytes,
+                                  restore_pytree, save_pytree)
 from ..configs.base import MeshConfig, TrainConfig
 from ..models.pruned import PrunedModel
 from ..robustness import faults as _faults
@@ -211,6 +253,10 @@ class FamilyRunState:
 
     def __init__(self, run_dir: str, header: Dict):
         self.path = os.path.join(run_dir, self.FILE)
+        # the overlapped scheduler records from two threads (main stage
+        # loop + export tail); atomic_write_json's tmp name is only
+        # pid-unique, so manifest mutation + save must serialize here
+        self._lock = threading.RLock()
         doc = load_json(self.path)
         if doc is not None and doc.get("header") != header:
             raise ValueError(
@@ -226,10 +272,12 @@ class FamilyRunState:
         self._save()
 
     def _save(self):
-        atomic_write_json(self.path, self.doc)
+        with self._lock:
+            atomic_write_json(self.path, self.doc)
 
     def entry(self, tkey: str) -> Dict:
-        return self.doc["targets"].setdefault(tkey, {"stage": "pending"})
+        with self._lock:
+            return self.doc["targets"].setdefault(tkey, {"stage": "pending"})
 
     def stage_done(self, tkey: str, stage: str) -> bool:
         cur = self.entry(tkey)["stage"]
@@ -247,22 +295,24 @@ class FamilyRunState:
         ``done``) refreshes its payload/sha without undoing the later
         stages — deliberate rollbacks write ``entry["stage"]``
         directly."""
-        e = self.entry(tkey)
-        if (e["stage"] == "pending"
-                or STAGES.index(stage) >= STAGES.index(e["stage"])):
-            e["stage"] = stage
-        e.update(payload)
-        if executed:
-            self.doc["executed"].append(
-                {"run": self.run, "target": tkey, "stage": stage})
-        self._save()
+        with self._lock:
+            e = self.entry(tkey)
+            if (e["stage"] == "pending"
+                    or STAGES.index(stage) >= STAGES.index(e["stage"])):
+                e["stage"] = stage
+            e.update(payload)
+            if executed:
+                self.doc["executed"].append(
+                    {"run": self.run, "target": tkey, "stage": stage})
+            self._save()
 
     def log_exec(self, tkey: str, stage: str):
         """Log a stage execution without completing it (mid-stage work
         such as an in-flight finetune)."""
-        self.doc["executed"].append(
-            {"run": self.run, "target": tkey, "stage": stage})
-        self._save()
+        with self._lock:
+            self.doc["executed"].append(
+                {"run": self.run, "target": tkey, "stage": stage})
+            self._save()
 
     def executed(self, run: Optional[int] = None) -> List[Dict]:
         ev = self.doc["executed"]
@@ -287,9 +337,33 @@ def _save_artifact(path: str, arrays: Dict[str, np.ndarray]) -> str:
     return sha
 
 
+def _stream_artifact(mgr: CheckpointManager, path: str,
+                     arrays: Dict[str, np.ndarray]) -> str:
+    """Streaming twin of `_save_artifact`: serialize + sha256 on the
+    caller's thread, enqueue the bytes on the manager's bounded queue,
+    return the digest immediately.  npz serialization is deterministic,
+    so the digest recorded in the manifest before the enqueue is by
+    construction that of the bytes the worker later writes — the PR-6
+    integrity/quarantine contracts verify streamed artifacts unchanged.
+    The worker write runs through the same ``db.artifact_write`` fault
+    site (bounded retry, corrupt-after-write); persistent failures
+    surface at ``mgr.wait()`` — every preemption point and the end of
+    the run barrier on it before reporting stages durable."""
+    data, sha = npz_bytes(arrays)
+    mgr.submit_blob(path, data, site="db.artifact_write")
+    return sha
+
+
+def _hessian_arrays(hessians: Dict[str, jnp.ndarray]
+                    ) -> Dict[str, np.ndarray]:
+    # sync: artifact persistence — one pull per module Hessian
+    return {k: np.asarray(v) for k, v in hessians.items()}
+
+
 def _save_hessians(path: str, hessians: Dict[str, jnp.ndarray]) -> str:
-    return _save_artifact(
-        path, {k: np.asarray(v) for k, v in hessians.items()})
+    """Synchronous twin of the engine's streamed hessian write (kept for
+    tools/tests that persist artifacts outside a running manager)."""
+    return _save_artifact(path, _hessian_arrays(hessians))
 
 
 def _load_hessians(path: str, expected_sha: Optional[str] = None
@@ -303,14 +377,20 @@ def _load_hessians(path: str, expected_sha: Optional[str] = None
 _DB_FIELDS = ("snapshots", "errors", "priors", "levels", "order")
 
 
-def _save_db(path: str, db: Dict[str, ModuleDB]) -> str:
+def _db_arrays(db: Dict[str, ModuleDB]) -> Dict[str, np.ndarray]:
     arrs = {}
     for name, mdb in db.items():
         for f in _DB_FIELDS:
             # sync: artifact persistence — DB fields are host numpy
             arrs[f"{name}::{f}"] = np.asarray(getattr(mdb, f))
         arrs[f"{name}::base_norm"] = np.float64(mdb.base_norm)
-    return _save_artifact(path, arrs)
+    return arrs
+
+
+def _save_db(path: str, db: Dict[str, ModuleDB]) -> str:
+    """Synchronous twin of the engine's streamed db write (kept for
+    tools/tests that persist artifacts outside a running manager)."""
+    return _save_artifact(path, _db_arrays(db))
 
 
 def _load_db(cfg, path: str, expected_sha: Optional[str] = None
@@ -372,6 +452,7 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                   seed: int = 0, resume: bool = True,
                   stop_after: Optional[tuple] = None,
                   report: Optional[RobustnessReport] = None,
+                  overlap: bool = True,
                   verbose: bool = False) -> List[GradualVariant]:
     """Stage-checkpointed gradual family pruning (module docstring has the
     manifest/resume contract).
@@ -402,6 +483,13 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
     whole run — every layer's fault detections, recoveries, and breaker
     demotions accumulate there — and its dict dump lands in the manifest
     under ``"robustness"``, preempted runs included.
+
+    ``overlap`` runs each finished target's export tail (final loss
+    eval, params streaming, shrink) on a background thread, concurrent
+    with the next target's hessians/db/search/finetune (module docstring,
+    "Overlapped scheduler" section); results are bit-identical either
+    way, so the flag is deliberately NOT part of the resume header — a
+    serial run may resume an overlapped one and vice versa.
     """
     tcfg = tcfg or TrainConfig(learning_rate=8e-5, warmup_steps=5,
                                total_steps=finetune_steps,
@@ -448,7 +536,7 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
                 latency_backend=latency_backend, latency_kw=latency_kw,
                 mesh=mesh, data_axes=data_axes, mc=mc, specs=specs,
                 ckpt_every=ckpt_every, seed=seed, stop_after=stop_after,
-                verbose=verbose, run_dir=run_dir, frs=frs)
+                overlap=overlap, verbose=verbose, run_dir=run_dir, frs=frs)
     finally:
         # the run's robustness telemetry rides in the manifest even when
         # the run was preempted or crashed mid-stage
@@ -459,7 +547,7 @@ def gradual_prune(cfg, params, env, targets: Sequence[float],
 def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
                    finetune_steps, search_steps, search_pop, search_batched,
                    latency_backend, latency_kw, mesh, data_axes, mc, specs,
-                   ckpt_every, seed, stop_after, verbose, run_dir,
+                   ckpt_every, seed, stop_after, overlap, verbose, run_dir,
                    frs) -> List[GradualVariant]:
     """The family loop proper, run under an installed report scope
     (``gradual_prune`` is the argument-validating, manifest-owning
@@ -468,6 +556,29 @@ def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
     table = build_table(cfg, env, backend=latency_backend,
                         **(latency_kw or {}))
     loss_eval = calib_loss_fn(cfg, calib_batches[:1])
+    devices = list(mesh.devices.flat) if mesh is not None else None
+
+    # async artifact stream: hessians/db/params npz bytes are serialized
+    # + sha'd on the producing thread, then drained by the manager's
+    # worker (bounded queue -> backpressure); _barrier() is the only
+    # place that declares them durable
+    mgr = CheckpointManager(run_dir, async_save=True)
+    exports: List[threading.Thread] = []   # at most one in flight
+    export_err: List[BaseException] = []
+
+    def _join_exports(raise_errors: bool = True):
+        while exports:
+            exports.pop(0).join()
+        if export_err and raise_errors:
+            raise export_err.pop(0)
+
+    def _barrier():
+        """Durability barrier: join the in-flight export tail, then
+        drain the artifact queue (raising any persistent write failure
+        as CheckpointWriteError).  After this returns, every stage the
+        manifest calls complete is durably on disk."""
+        _join_exports()
+        mgr.wait()
 
     def make_trainer(tdir, masks=None):
         # the trainer mesh path needs the logical-axis specs; mesh without
@@ -482,16 +593,21 @@ def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
 
     def preempt_at(i, stage):
         if stop_after is not None and tuple(stop_after[:2]) == (i, stage):
+            # the documented semantics — "preemption right after that
+            # stage's artifact is durably persisted" — survive overlap:
+            # barrier first, so the manifest + artifacts the resuming run
+            # sees are exactly those of a serial run stopped here
+            _barrier()
             raise FamilyPreempted(
                 f"simulated preemption after {stage} of target index {i} "
                 f"(run dir {run_dir})")
 
     current = params
-    out: List[GradualVariant] = []
+    out: Dict[int, GradualVariant] = {}
     seeds = np.random.SeedSequence(seed).spawn(len(targets))
     loss_b = None  # one compiled batched loss for the whole family
 
-    def load_or_build_db(i, tkey, tdir, entry):
+    def load_or_build_db(i, tkey, tdir, entry, stage_t):
         """Sha-verified db load with fall-through rebuild: a corrupt
         (quarantined) or missing ``db.npz`` re-executes the db stage from
         the hessians artifact; a corrupt hessians artifact likewise falls
@@ -509,122 +625,185 @@ def _family_engine(cfg, params, env, targets, data, calib_batches, *, tcfg,
             hessians = _load_hessians(
                 hpath, expected_sha=entry.get("hessians_sha256"))
         if hessians is None:
+            t0 = time.perf_counter()
             hessians = collect_hessians(cfg, current, calib_batches,
                                         mesh=mesh, data_axes=data_axes)
-            frs.record(tkey, "hessians",
-                       hessians_sha256=_save_hessians(hpath, hessians))
+            hsha = _stream_artifact(mgr, hpath, _hessian_arrays(hessians))
+            stage_t["hessians"] = time.perf_counter() - t0
+            frs.record(tkey, "hessians", hessians_sha256=hsha,
+                       stage_times=dict(stage_t))
             preempt_at(i, "hessians")
-        db = build_database(cfg, current, hessians)
-        frs.record(tkey, "db", db_sha256=_save_db(dpath, db))
+        t0 = time.perf_counter()
+        db = build_database(cfg, current, hessians, mesh=mesh,
+                            shard_axes=data_axes)
+        dsha = _stream_artifact(mgr, dpath, _db_arrays(db))
+        stage_t["db"] = time.perf_counter() - t0
+        frs.record(tkey, "db", db_sha256=dsha, stage_times=dict(stage_t))
         preempt_at(i, "db")
         return db
 
-    for i, target in enumerate(targets):
-        tkey = _tkey(target)
-        tdir = os.path.join(run_dir, f"t{tkey}")
-        entry = frs.entry(tkey)
-
-        if entry["stage"] == "done":
-            # completed target: reconstruct the variant from artifacts —
-            # no Hessians, no DB build, no search, no finetune. The final
-            # params ride in their own params.npz (written at completion)
-            # so this path never pays for restoring optimizer/EF state.
-            ppath = os.path.join(tdir, "params.npz")
-            if not os.path.exists(ppath):
-                raise RuntimeError(
-                    f"manifest says target {target} is done but its final "
-                    f"params artifact is missing ({ppath})")
-            want = entry.get("params_sha256")
-            if want is not None and file_sha256(ppath) != want:
-                # final params rotted on disk: quarantine them and roll
-                # this target back to its search stage — the recorded
-                # search result plus the trainer's own checkpoints
-                # repair it below (deliberate stage regression, written
-                # directly because record() never regresses)
-                quarantine_file(ppath, site="db.artifact_write")
-                entry["stage"] = "search"
-                frs._save()
-            else:
-                db = load_or_build_db(i, tkey, tdir, entry)
-                res = _result_from(entry)
-                current = restore_pytree(current, ppath)
-                pm = shrink(cfg, current, db, res.assignment)
-                out.append(GradualVariant(
-                    target=target, achieved=res.speedup,
-                    assignment=res.assignment, params=current, pruned=pm,
-                    # sync: manifest floats, host data
-                    loss_before_ft=float(entry["loss_before_ft"]),
-                    # sync: manifest floats, host data
-                    loss_after_ft=float(entry["loss_after_ft"])))
-                if verbose:
-                    print(f"[gradual] {target}x restored (stage done)")
-                continue
-
-        # ---- stages: hessians (re-calibrate on the *current* model —
-        # Hessians drift as we prune) + database, both sha-verified with
-        # quarantine-and-rebuild on corruption. ----
-        db = load_or_build_db(i, tkey, tdir, entry)
-        cache = SnapshotCache(cfg, db)
-
-        # ---- stage: SPDY search ----
-        if frs.stage_done(tkey, "search"):
-            res = _result_from(entry)
-            masked = apply_assignment(cfg, current, db, res.assignment,
-                                      cache=cache)
-            loss_before = float(entry["loss_before_ft"])  # sync: manifest
-        else:
-            if loss_b is None:
-                loss_b = batched_calib_loss_fn(cfg, calib_batches[:1],
-                                               cache.batch_axes(current))
-            res = search(db, table, target, steps=search_steps,
-                         pop=search_pop, batched=search_batched,
-                         seed=seeds[i],
-                         eval_fn=lambda a: loss_eval(apply_assignment(
-                             cfg, current, db, a, cache=cache)),
-                         eval_batched=make_batched_eval(
-                             cfg, current, cache, calib_batches[:1],
-                             loss_b=loss_b))
-            masked = apply_assignment(cfg, current, db, res.assignment,
-                                      cache=cache)
-            loss_before = loss_eval(masked)
-            frs.record(tkey, "search", loss_before_ft=loss_before,
-                       **_result_payload(res))
-            preempt_at(i, "search")
-
-        # ---- stage: distillation finetune ----
-        masks = masks_from_assignment(cfg, masked, db, res.assignment)
-        trainer = make_trainer(tdir, masks=masks)
-        state = trainer.init_or_restore(masked)
-        start = int(state.step)
-        data_iter = data(i * finetune_steps + start) if callable(data) \
-            else data
-        fit_stop = None
-        if stop_after is not None and tuple(stop_after[:2]) == \
-                (i, "finetune") and len(stop_after) > 2:
-            fit_stop = int(stop_after[2])
-        if start < finetune_steps:
-            frs.log_exec(tkey, "finetune")
-        state = trainer.fit(state, data_iter, steps=finetune_steps,
-                            stop_after=fit_stop)
-        if int(state.step) < finetune_steps:
-            # simulated stop_after kill or a real SIGTERM preemption — the
-            # trainer checkpointed; re-invoking resumes from that step
-            raise FamilyPreempted(
-                f"preempted mid-finetune of target {target} at step "
-                f"{int(state.step)} (run dir {run_dir})")
-        current = state.params
-        loss_after = loss_eval(current)
-        psha = save_pytree(current, os.path.join(tdir, "params.npz"))
+    def export_tail(i, target, tkey, tdir, db, res, loss_before, cur,
+                    stage_t):
+        """Target ``i``'s read-only completion work: final loss eval,
+        params streaming (sha-before-enqueue), shrink, "done" record and
+        variant assembly.  Under ``overlap`` this runs on a background
+        thread concurrent with target ``i+1``'s stages; everything it
+        touches is immutable (``cur`` is the finished params tree) and
+        deterministic, so the scheduler cannot change a single bit."""
+        t0 = time.perf_counter()
+        loss_after = loss_eval(cur)
+        data_b, psha = npz_bytes(_flatten(cur))
+        mgr.submit_blob(os.path.join(tdir, "params.npz"), data_b,
+                        site="db.artifact_write")
+        pm = shrink(cfg, cur, db, res.assignment)
+        stage_t["export"] = time.perf_counter() - t0
         frs.record(tkey, "done", executed=False, loss_after_ft=loss_after,
-                   params_sha256=psha)
-
-        pm = shrink(cfg, current, db, res.assignment)
-        out.append(GradualVariant(
+                   params_sha256=psha, stage_times=dict(stage_t))
+        out[i] = GradualVariant(
             target=target, achieved=res.speedup, assignment=res.assignment,
-            params=current, pruned=pm, loss_before_ft=loss_before,
-            loss_after_ft=loss_after))
+            params=cur, pruned=pm, loss_before_ft=loss_before,
+            loss_after_ft=loss_after)
         if verbose:
             print(f"[gradual] {target}x -> {res.speedup:.2f}x  "
                   f"loss {loss_before:.4f} -> {loss_after:.4f}  "
                   f"stack params {pm.encoder_params()/1e6:.2f}M")
-    return out
+
+    def export_tail_bg(*args):
+        try:
+            export_tail(*args)
+        except BaseException as e:   # surfaced at the next _barrier()
+            export_err.append(e)
+
+    try:
+        for i, target in enumerate(targets):
+            tkey = _tkey(target)
+            tdir = os.path.join(run_dir, f"t{tkey}")
+            entry = frs.entry(tkey)
+            stage_t: Dict[str, float] = dict(entry.get("stage_times", {}))
+
+            if entry["stage"] == "done":
+                # completed target: reconstruct the variant from artifacts
+                # — no Hessians, no DB build, no search, no finetune. The
+                # final params ride in their own params.npz (written at
+                # completion) so this path never pays for restoring
+                # optimizer/EF state.
+                ppath = os.path.join(tdir, "params.npz")
+                want = entry.get("params_sha256")
+                if not os.path.exists(ppath):
+                    # a kill can outrun the async params stream: "done"
+                    # was durably recorded while params.npz died in the
+                    # write queue. Roll back to "search" — the recorded
+                    # search result plus the trainer's own checkpoints
+                    # repair it below (deliberate stage regression,
+                    # written directly because record() never regresses)
+                    entry["stage"] = "search"
+                    frs._save()
+                elif want is not None and file_sha256(ppath) != want:
+                    # final params rotted on disk: quarantine + the same
+                    # search-stage rollback
+                    quarantine_file(ppath, site="db.artifact_write")
+                    entry["stage"] = "search"
+                    frs._save()
+                else:
+                    db = load_or_build_db(i, tkey, tdir, entry, stage_t)
+                    res = _result_from(entry)
+                    current = restore_pytree(current, ppath)
+                    pm = shrink(cfg, current, db, res.assignment)
+                    out[i] = GradualVariant(
+                        target=target, achieved=res.speedup,
+                        assignment=res.assignment, params=current,
+                        pruned=pm,
+                        # sync: manifest floats, host data
+                        loss_before_ft=float(entry["loss_before_ft"]),
+                        # sync: manifest floats, host data
+                        loss_after_ft=float(entry["loss_after_ft"]))
+                    if verbose:
+                        print(f"[gradual] {target}x restored (stage done)")
+                    continue
+
+            # ---- stages: hessians (re-calibrate on the *current* model —
+            # Hessians drift as we prune) + database, both sha-verified
+            # with quarantine-and-rebuild on corruption. ----
+            db = load_or_build_db(i, tkey, tdir, entry, stage_t)
+            cache = SnapshotCache(cfg, db)
+
+            # ---- stage: SPDY search ----
+            if frs.stage_done(tkey, "search"):
+                res = _result_from(entry)
+                masked = apply_assignment(cfg, current, db, res.assignment,
+                                          cache=cache)
+                loss_before = float(entry["loss_before_ft"])  # sync: manifest
+            else:
+                t0 = time.perf_counter()
+                if loss_b is None:
+                    loss_b = batched_calib_loss_fn(cfg, calib_batches[:1],
+                                                   cache.batch_axes(current))
+                res = search(db, table, target, steps=search_steps,
+                             pop=search_pop, batched=search_batched,
+                             seed=seeds[i], devices=devices,
+                             eval_fn=lambda a: loss_eval(apply_assignment(
+                                 cfg, current, db, a, cache=cache)),
+                             eval_batched=make_batched_eval(
+                                 cfg, current, cache, calib_batches[:1],
+                                 loss_b=loss_b))
+                masked = apply_assignment(cfg, current, db, res.assignment,
+                                          cache=cache)
+                loss_before = loss_eval(masked)
+                stage_t["search"] = time.perf_counter() - t0
+                frs.record(tkey, "search", loss_before_ft=loss_before,
+                           stage_times=dict(stage_t),
+                           **_result_payload(res))
+                preempt_at(i, "search")
+
+            # ---- stage: distillation finetune ----
+            t0 = time.perf_counter()
+            masks = masks_from_assignment(cfg, masked, db, res.assignment)
+            trainer = make_trainer(tdir, masks=masks)
+            state = trainer.init_or_restore(masked)
+            start = int(state.step)
+            data_iter = data(i * finetune_steps + start) if callable(data) \
+                else data
+            fit_stop = None
+            if stop_after is not None and tuple(stop_after[:2]) == \
+                    (i, "finetune") and len(stop_after) > 2:
+                fit_stop = int(stop_after[2])
+            if start < finetune_steps:
+                frs.log_exec(tkey, "finetune")
+            state = trainer.fit(state, data_iter, steps=finetune_steps,
+                                stop_after=fit_stop)
+            if int(state.step) < finetune_steps:
+                # simulated stop_after kill or a real SIGTERM preemption —
+                # the trainer checkpointed; re-invoking resumes from that
+                # step (barrier: the previous target's export must be as
+                # durable as a serial run's before we report preempted)
+                _barrier()
+                raise FamilyPreempted(
+                    f"preempted mid-finetune of target {target} at step "
+                    f"{int(state.step)} (run dir {run_dir})")
+            current = state.params
+            stage_t["finetune"] = time.perf_counter() - t0
+
+            # ---- export tail: overlapped with the next target's stages
+            # (only reads the finished `current`), or inline when serial
+            tail_args = (i, target, tkey, tdir, db, res, loss_before,
+                         current, stage_t)
+            if overlap:
+                _join_exports()          # at most one export in flight
+                th = threading.Thread(target=export_tail_bg,
+                                      args=tail_args, daemon=True)
+                exports.append(th)
+                th.start()
+            else:
+                export_tail(*tail_args)
+        _barrier()
+        return [out[i] for i in range(len(targets))]
+    finally:
+        _join_exports(raise_errors=False)
+        try:
+            mgr.close()
+        except CheckpointWriteError:
+            # on an exception path the original error wins (a preempting
+            # _barrier() already surfaced write failures); re-raise only
+            # when nothing else is propagating
+            if sys.exc_info()[0] is None:
+                raise

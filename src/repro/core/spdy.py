@@ -176,6 +176,35 @@ def dp_select_batched(costs: List[np.ndarray], times=None, budget=None,
     return choices, totals
 
 
+def _eval_placed(eval_batched, assemble, new_keys: List[tuple],
+                 new_from: List[int], devices) -> np.ndarray:
+    """Per-device placement of one round's candidate scoring: each
+    producing target's unique candidates are stitched + scored on that
+    target's device (``devices[k % ndev]``), one thread per partition so
+    the device computations overlap.  Scores are bitwise those of the
+    single unplaced call — vmap lanes are independent of their batch
+    company — and the gather back into the shared memo remains the
+    round's single host sync point."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    parts: Dict[int, List[int]] = {}
+    for i, k in enumerate(new_from):
+        parts.setdefault(k, []).append(i)
+    items = sorted(parts.items())
+
+    def run(item):
+        k, idxs = item
+        return idxs, eval_batched(
+            [assemble(new_keys[i]) for i in idxs],
+            device=devices[k % len(devices)])
+
+    vals = np.empty((len(new_keys),), np.float64)
+    with ThreadPoolExecutor(max_workers=max(len(items), 1)) as ex:
+        for idxs, v in ex.map(run, items):
+            vals[idxs] = np.asarray(v, np.float64)
+    return vals
+
+
 def _spawn_rngs(seed: SeedLike, n: int) -> List[np.random.Generator]:
     """Fold-in derived, mutually independent per-target RNG streams."""
     root = (seed if isinstance(seed, np.random.SeedSequence)
@@ -213,7 +242,7 @@ def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
                   eval_batched: Optional[
                       Callable[[List[Dict[str, int]]], np.ndarray]] = None,
                   seed: SeedLike = 0, batched: bool = True,
-                  share_pool: bool = True,
+                  share_pool: bool = True, devices=None,
                   verbose: bool = False) -> Dict[float, SearchResult]:
     """One amortized SPDY search over a whole speedup-target family.
 
@@ -223,6 +252,14 @@ def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
     ``oneshot.make_batched_eval``); without it the batched path falls back
     to per-candidate ``eval_fn`` on the deduplicated pool.  With neither,
     candidates get the paper's analytic sum-of-squared-priors score.
+
+    ``devices`` (>1, with an ``eval_batched`` advertising
+    ``supports_device``) places each target's population eval on its own
+    device — per-target DP slabs and mutation streams are already
+    independent, so placement adds concurrency without changing a single
+    score bit, and the shared memo gather stays the one host sync per
+    round.  A placement failure trips the ``spdy.batched_eval`` breaker
+    into the usual serial reference rung.
     """
     targets = list(targets)
     K = len(targets)
@@ -288,6 +325,7 @@ def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
 
         # dedup this round's feasible candidates against the shared memo
         new_keys: List[tuple] = []
+        new_from: List[int] = []  # first-producing target per new key
         for k, C, ch in entries:
             for p in range(ch.shape[0]):
                 if ch[p, 0] < 0:
@@ -296,6 +334,7 @@ def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
                 if key not in memo and key not in producer:
                     producer[key] = C[p].copy()
                     new_keys.append(key)
+                    new_from.append(k)
 
         if new_keys:
             if analytic:
@@ -309,13 +348,21 @@ def search_family(db: Dict[str, ModuleDB], table: LatencyTable,
                 # acceptance stream, just slower
                 vals = None
                 rep = current_report()
+                placed = (devices is not None and len(devices) > 1
+                          and getattr(eval_batched, "supports_device",
+                                      False))
                 if (batched and eval_batched is not None
                         and not rep.breaker_open("spdy.batched_eval")):
                     try:
-                        vals = np.asarray(
-                            eval_batched([assemble(key)
-                                          for key in new_keys]),
-                            np.float64)
+                        if placed:
+                            vals = _eval_placed(eval_batched, assemble,
+                                                new_keys, new_from,
+                                                devices)
+                        else:
+                            vals = np.asarray(
+                                eval_batched([assemble(key)
+                                              for key in new_keys]),
+                                np.float64)
                     except Exception as e:
                         rep.trip("spdy.batched_eval",
                                  reason=f"batched eval failed: {e!r}")
@@ -401,6 +448,7 @@ def search(db: Dict[str, ModuleDB], table: LatencyTable,
            eval_batched: Optional[
                Callable[[List[Dict[str, int]]], np.ndarray]] = None,
            seed: SeedLike = 0, batched: bool = True,
+           devices: Optional[List] = None,
            verbose: bool = False) -> SearchResult:
     """Single-target random-mutation search (paper §3.2) — a one-target
     `search_family`.  ``batched=False`` is the serial equivalence
@@ -409,4 +457,4 @@ def search(db: Dict[str, ModuleDB], table: LatencyTable,
         db, table, [target_speedup], steps=steps, pop=pop,
         mutate_frac=mutate_frac, nbins=nbins, eval_fn=eval_fn,
         eval_batched=eval_batched, seed=seed, batched=batched,
-        verbose=verbose)[target_speedup]
+        devices=devices, verbose=verbose)[target_speedup]

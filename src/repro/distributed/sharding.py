@@ -74,6 +74,20 @@ def data_axes_for(mesh: Mesh) -> Tuple[str, ...]:
     return named or tuple(mesh.axis_names)
 
 
+def pad_leading(arr, multiple: int):
+    """Pad ``arr``'s leading axis up to a ``multiple`` by replicating the
+    first slice (a real, finite element — padded lanes must run the same
+    numerics as live ones so vmapped/shard_mapped batches stay NaN-free).
+    Callers slice the result back to the original length."""
+    import jax.numpy as jnp
+    b = arr.shape[0]
+    pad = (-b) % max(multiple, 1)
+    if pad == 0:
+        return arr
+    fill = jnp.broadcast_to(arr[:1], (pad,) + tuple(arr.shape[1:]))
+    return jnp.concatenate([arr, fill], axis=0)
+
+
 def logical_to_pspec(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh,
                      mc: MeshConfig) -> P:
     """Map one leaf's logical axis names to a PartitionSpec."""

@@ -32,6 +32,8 @@ Fault-injection sites
                         fed to Algorithm 1 (``core.database``)
 ``db.artifact_write``   raise / transient-OSError / corrupt-after-write
                         on family stage artifacts (``core.pipeline``)
+``db.sharded_group``    raise at the device-sharded database chunk
+                        build (``core.database.build_database``)
 ``ckpt.async_write``    same, on the async checkpoint worker
                         (``checkpoint.manager``)
 ``latency.measure``     raise / delay inside wall-clock module timing
@@ -69,6 +71,9 @@ circuit breaker (counted + logged once per site in the ambient
 * batched SPDY eval failure (e.g. OOM ``XlaRuntimeError``)
                               -> serial per-candidate reference eval
   with identical scores (``core.spdy.search_family``);
+* device-sharded database chunk failure
+                              -> single-device vmapped build — the
+  bit-exact equivalence reference (``core.database.build_database``);
 * non-finite OBS prune result -> damping-escalation ladder
   (``damp * 10**k``, bounded retries; ``core.database``);
 * poisoned calibration batch  -> skipped + counted, preserving

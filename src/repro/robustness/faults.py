@@ -39,8 +39,8 @@ from .report import current_report
 # here without a `hit`/`poison_*`/`corrupt_file` caller — or vice
 # versa — fails `python -m repro.analysis --check`.
 SITES = ("calib.batch", "obs.cholesky", "db.artifact_write",
-         "ckpt.async_write", "latency.measure", "kernel.pallas",
-         "spdy.batched_eval", "serve.step")
+         "db.sharded_group", "ckpt.async_write", "latency.measure",
+         "kernel.pallas", "spdy.batched_eval", "serve.step")
 MODES = ("raise", "oserror", "nan", "inf", "corrupt", "delay")
 
 

@@ -140,6 +140,60 @@ def test_async_write_failure_surfaces_at_close(tmp_path, monkeypatch):
         m.close()
 
 
+def test_streamed_blob_roundtrip_sha_and_backpressure(tmp_path):
+    """submit_blob streams pre-serialized npz bytes: the sha256 recorded
+    BEFORE enqueue equals the on-disk digest (np.savez bytes are
+    deterministic), the file round-trips, and a queue bounded at depth 1
+    still lands every blob (put blocks on backpressure, never drops)."""
+    from repro.checkpoint.manager import npz_bytes
+    from repro.robustness.integrity import file_sha256
+    m = CheckpointManager(str(tmp_path), keep=3, max_queue=1)
+    shas = {}
+    for i in range(8):
+        arrays = {"x": np.full((64, 64), float(i), np.float32)}
+        path = os.path.join(str(tmp_path), f"blob{i}.npz")
+        data, sha = npz_bytes(arrays)
+        m.submit_blob(path, data)
+        shas[path] = sha
+    m.wait()
+    for path, sha in shas.items():
+        assert file_sha256(path) == sha
+    got = np.load(os.path.join(str(tmp_path), "blob3.npz"))
+    assert np.array_equal(got["x"], np.full((64, 64), 3.0, np.float32))
+    m.close()
+
+
+def test_streamed_blob_failure_surfaces_at_wait(tmp_path, monkeypatch):
+    """PR-6 wait() error-surfacing contract on the streamed-artifact
+    path: a persistent write failure of a submitted blob must raise
+    CheckpointWriteError from wait() (drained on raise, manager
+    reusable), exactly like a failed checkpoint save."""
+    import repro.checkpoint.manager as M
+    from repro.checkpoint.manager import npz_bytes
+    real = M.atomic_write_bytes
+    fail = {"on": True}
+
+    def _maybe_fail(path, data):
+        if fail["on"]:
+            raise OSError(28, "No space left on device", path)
+        return real(path, data)
+
+    monkeypatch.setattr(M, "atomic_write_bytes", _maybe_fail)
+    m = CheckpointManager(str(tmp_path), keep=3)
+    data, _ = npz_bytes({"x": np.ones((4,), np.float32)})
+    path = os.path.join(str(tmp_path), "blob.npz")
+    m.submit_blob(path, data)
+    with pytest.raises(CheckpointWriteError) as ei:
+        m.wait()
+    assert any(isinstance(e, OSError) for e in ei.value.errors)
+    m.wait()  # errors drained on raise
+    fail["on"] = False
+    m.submit_blob(path, data)
+    m.wait()
+    assert os.path.exists(path)
+    m.close()
+
+
 def test_transient_write_error_heals(tmp_path, monkeypatch):
     """One transient OSError then success: retry_io retries with backoff,
     the checkpoint lands, and wait() stays silent."""

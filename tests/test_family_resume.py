@@ -149,6 +149,82 @@ def test_interleaved_runs_never_cross_restore(tiny_cfg, tiny_params,
     assert d0 != d1 and os.path.isdir(d0) and os.path.isdir(d1)
 
 
+@pytest.mark.tier2
+def test_overlap_schedule_bit_identical_to_serial(tiny_cfg, tiny_params,
+                                                  family_calib, tmp_path,
+                                                  uninterrupted):
+    """The overlapped scheduler (default; the `uninterrupted` fixture)
+    must be bit-identical to the serial ``overlap=False`` schedule: the
+    export tail it moves onto a background thread only reads immutable
+    state.  Also asserts the per-stage wall-time breakdown each record
+    carries for the benchmarks."""
+    serial = _run(tiny_cfg, tiny_params, family_calib, str(tmp_path),
+                  overlap=False)
+    for vo, vs in zip(uninterrupted, serial):
+        assert vo.assignment == vs.assignment
+        assert _tree_equal(vo.params, vs.params)
+        assert vo.loss_before_ft == vs.loss_before_ft
+        assert vo.loss_after_ft == vs.loss_after_ft
+    man = _manifest(tiny_cfg, str(tmp_path))
+    for t in ("1.5", "2"):
+        st = man["targets"][t]["stage_times"]
+        assert set(st) == {"hessians", "db", "search", "finetune",
+                           "export"}
+        assert all(v >= 0.0 for v in st.values())
+
+
+@pytest.mark.tier2
+def test_overlap_kill_during_export_window_resumes(tiny_cfg, tiny_params,
+                                                   family_calib, tmp_path,
+                                                   uninterrupted):
+    """Kill right after target #2's Hessians — the window where target
+    #1's export tail may still be in flight under overlap.  The
+    pre-raise durability barrier must leave exactly a serial run's
+    state: target #1 fully done (streamed params.npz durable and
+    sha-valid), and the resume re-executes only db/search/finetune of
+    target #2."""
+    base = str(tmp_path)
+    with pytest.raises(FamilyPreempted):
+        _run(tiny_cfg, tiny_params, family_calib, base,
+             stop_after=(1, "hessians"))
+    man = _manifest(tiny_cfg, base)
+    assert man["targets"]["1.5"]["stage"] == "done"
+    run_dir = family_run_dir(tiny_cfg, TARGETS, 0, base)
+    ppath = os.path.join(run_dir, "t1.5", "params.npz")
+    assert os.path.exists(ppath)
+    from repro.robustness.integrity import file_sha256
+    assert file_sha256(ppath) == man["targets"]["1.5"]["params_sha256"]
+
+    resumed = _run(tiny_cfg, tiny_params, family_calib, base)
+    for vf, vr in zip(uninterrupted, resumed):
+        assert vf.assignment == vr.assignment
+        assert _tree_equal(vf.params, vr.params)
+    man = _manifest(tiny_cfg, base)
+    run2 = [(e["target"], e["stage"]) for e in man["executed"]
+            if e["run"] == 2]
+    assert run2 == [("2", "db"), ("2", "search"), ("2", "finetune")]
+
+
+@pytest.mark.tier2
+def test_done_without_params_artifact_rolls_back_to_search(
+        tiny_cfg, tiny_params, family_calib, tmp_path, uninterrupted):
+    """A hard kill can outrun the async params stream: the manifest
+    durably says "done" while params.npz never left the queue.  The
+    done-restore path must roll that target back to its search stage and
+    repair it from the recorded search result + trainer checkpoints,
+    bit-identical to the uninterrupted run."""
+    base = str(tmp_path)
+    _run(tiny_cfg, tiny_params, family_calib, base)
+    run_dir = family_run_dir(tiny_cfg, TARGETS, 0, base)
+    os.remove(os.path.join(run_dir, "t2", "params.npz"))
+    resumed = _run(tiny_cfg, tiny_params, family_calib, base)
+    for vf, vr in zip(uninterrupted, resumed):
+        assert vf.assignment == vr.assignment
+        assert _tree_equal(vf.params, vr.params)
+        assert vf.loss_after_ft == vr.loss_after_ft
+    assert os.path.exists(os.path.join(run_dir, "t2", "params.npz"))
+
+
 def test_run_dir_unique_per_family(tiny_cfg):
     """The derived directory separates cfg / targets / seed variations and
     never collapses to a shared literal."""

@@ -220,7 +220,8 @@ def test_fault_free_run_bit_identical_under_armed_plan(
     plan = FaultPlan.parse(
         ",".join(f"{s}:raise@100000" for s in
                  ("calib.batch", "obs.cholesky", "db.artifact_write",
-                  "ckpt.async_write", "spdy.batched_eval")))
+                  "db.sharded_group", "ckpt.async_write",
+                  "spdy.batched_eval")))
     rep = RobustnessReport()
     with install(plan):
         got = _run(tiny_cfg, tiny_params, family_calib, str(tmp_path),
@@ -486,3 +487,61 @@ def test_trainer_guard_reloads_then_raises_without_progress(
         t.fit(state, synthetic_stream(tiny_cfg, 8, 32, seed=3), steps=10)
     assert t.guard["reloads"] == 1
     t.ckpt.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_sharded_db_failure_demotes_to_single_device_bit_identical():
+    """Degradation rung for the device-sharded database build: a chunk
+    failing inside the shard_map'ed Algorithm-1 path trips the
+    ``db.sharded_group`` breaker once and the build is served by the
+    single-device vmapped path — bit-identical to a never-sharded build.
+    Driven on a forced 2-device mesh in a subprocess."""
+    from repro.launch.subproc import run_forced_devices
+    script = r"""
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.configs import GPT2_SMALL
+from repro.core.database import build_database
+from repro.core.structures import registry
+from repro.distributed.sharding import make_mesh
+from repro.models import model_init
+from repro.robustness import (FaultPlan, RobustnessReport, install,
+                              report_scope)
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+cfg = TINY
+params = model_init(cfg, jax.random.key(0))[0]
+rng = np.random.default_rng(0)
+h = {}
+for m in registry(cfg):
+    X = rng.standard_normal((3 * m.d_in + 16, m.d_in))
+    h[m.name] = jnp.asarray(X.T @ X / len(X), jnp.float32)
+
+ref = build_database(cfg, params, h)                  # never sharded
+mesh = make_mesh((jax.device_count(),), ("data",))
+rep = RobustnessReport()
+with install(FaultPlan.parse("db.sharded_group:raise@0")), \
+        report_scope(rep):
+    demoted = build_database(cfg, params, h, mesh=mesh)
+out = {
+    "ndev": jax.device_count(),
+    "bit_identical": bool(all(
+        np.array_equal(ref[k].snapshots, demoted[k].snapshots)
+        and np.array_equal(ref[k].errors, demoted[k].errors)
+        and np.array_equal(ref[k].order, demoted[k].order)
+        for k in ref)),
+    "demotions": rep.counts["demotions"].get("db.sharded_group", 0),
+    "breaker_open": rep.breaker_open("db.sharded_group"),
+}
+print("RESULT" + json.dumps(out))
+"""
+    out = run_forced_devices(script, 2)
+    assert out["ndev"] == 2
+    assert out["bit_identical"]
+    assert out["demotions"] == 1
+    assert out["breaker_open"]

@@ -1,0 +1,122 @@
+"""Device-parallel compression equivalence on a real (forced 2-device
+CPU) mesh, driven in subprocesses so the main test process keeps its
+single device (same pattern as tests/test_sharded_calibration.py):
+
+* the shard_map'ed Algorithm-1 database build is BIT-identical to the
+  single-device vmapped build — plain and compact paths, including a
+  ragged chunk size that forces group padding;
+* `spdy.search_family` with per-device population placement reproduces
+  the unplaced search bit-for-bit (assignments, scores, history) — the
+  vmap lanes are independent, so placement cannot perturb a score.
+"""
+import pytest
+
+from repro.launch.subproc import run_forced_devices
+
+_DB_SCRIPT = r"""
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.configs import GPT2_SMALL
+from repro.core.database import build_database
+from repro.core.structures import registry
+from repro.distributed.sharding import make_mesh
+from repro.models import model_init
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+cfg = TINY
+params = model_init(cfg, jax.random.key(0))[0]
+rng = np.random.default_rng(0)
+h = {}
+for m in registry(cfg):
+    X = rng.standard_normal((3 * m.d_in + 16, m.d_in))
+    h[m.name] = jnp.asarray(X.T @ X / len(X), jnp.float32)
+
+mesh = make_mesh((jax.device_count(),), ("data",))
+out = {"ndev": jax.device_count()}
+for compact in (False, True):
+    ref = build_database(cfg, params, h, compact=compact)
+    sh = build_database(cfg, params, h, compact=compact, mesh=mesh)
+    out["compact" if compact else "plain"] = bool(all(
+        np.array_equal(ref[k].snapshots, sh[k].snapshots)
+        and np.array_equal(ref[k].errors, sh[k].errors)
+        and np.array_equal(ref[k].order, sh[k].order)
+        for k in ref))
+# ragged: max_batch=3 over 2 devices forces the pad_leading path
+ref = build_database(cfg, params, h, max_batch=3)
+sh = build_database(cfg, params, h, max_batch=3, mesh=mesh)
+out["ragged"] = bool(all(
+    np.array_equal(ref[k].snapshots, sh[k].snapshots)
+    and np.array_equal(ref[k].errors, sh[k].errors)
+    and np.array_equal(ref[k].order, sh[k].order)
+    for k in ref))
+print("RESULT" + json.dumps(out))
+"""
+
+_SEARCH_SCRIPT = r"""
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.configs import GPT2_SMALL
+from repro.core.database import SnapshotCache, build_database
+from repro.core.latency import build_table
+from repro.core.oneshot import make_batched_eval
+from repro.core.spdy import search_family
+from repro.core.structures import registry
+from repro.data import calibration_batches
+from repro.models import model_init
+from repro.runtime.costmodel import InferenceEnv
+
+TINY = GPT2_SMALL.replace(
+    name="gpt2-tiny", num_layers=2, d_model=64, d_ff=128, num_heads=4,
+    num_kv_heads=4, head_dim=16, vocab_size=256, dtype="float32")
+cfg = TINY
+params = model_init(cfg, jax.random.key(0))[0]
+rng = np.random.default_rng(0)
+h = {}
+for m in registry(cfg):
+    X = rng.standard_normal((3 * m.d_in + 16, m.d_in))
+    h[m.name] = jnp.asarray(X.T @ X / len(X), jnp.float32)
+db = build_database(cfg, params, h)
+cache = SnapshotCache(cfg, db)
+calib = calibration_batches(cfg, 16, 64, batch=8)[:1]
+table = build_table(cfg, InferenceEnv(batch=1, seq=64))
+targets = [1.5, 2.0]
+
+r_ref = search_family(
+    db, table, targets, steps=24, pop=8, seed=3,
+    eval_batched=make_batched_eval(cfg, params, cache, calib))
+r_pl = search_family(
+    db, table, targets, steps=24, pop=8, seed=3,
+    eval_batched=make_batched_eval(cfg, params, cache, calib),
+    devices=jax.devices())
+out = {"ndev": jax.device_count()}
+for t in targets:
+    out[str(t)] = bool(r_ref[t].assignment == r_pl[t].assignment
+                       and r_ref[t].score == r_pl[t].score
+                       and r_ref[t].history == r_pl[t].history)
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.mark.tier2
+@pytest.mark.slow
+def test_sharded_db_build_bit_identical_2dev():
+    out = run_forced_devices(_DB_SCRIPT, 2)
+    assert out["ndev"] == 2
+    assert out["plain"]
+    assert out["compact"]
+    assert out["ragged"]
+
+
+@pytest.mark.tier2
+@pytest.mark.slow
+def test_placed_search_family_bit_identical_2dev():
+    out = run_forced_devices(_SEARCH_SCRIPT, 2)
+    assert out["ndev"] == 2
+    assert out["1.5"]
+    assert out["2.0"]
