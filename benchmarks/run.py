@@ -63,7 +63,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.checkpoint.manager import atomic_write_json
-from repro.configs import BERT_BASE, GPT2_SMALL
+from repro.configs import BERT_BASE, GPT2_SMALL, smoke_config
 from repro.configs.base import TrainConfig
 from repro.core.database import (SnapshotCache, apply_assignment,
                                  build_database)
@@ -418,7 +418,9 @@ def _bench_db_setup():
 BENCH_KEYS = (
     "db_build", "db_build_compact", "spdy_eval", "spdy_search",
     "calib_shard", "latency_cache", "gradual_family",
-    "gradual_family_smoke", "family_sharded", "family_sharded_smoke",
+    "gradual_family_smoke", "gradual_family_smoke_moe",
+    "gradual_family_smoke_ssm", "gradual_family_smoke_gqa",
+    "family_sharded", "family_sharded_smoke",
     "chaos", "chaos_smoke", "serve", "serve_smoke",
 )
 
@@ -1014,6 +1016,84 @@ def bench_gradual_family():
         f"equal={assignments_equal}/{params_equal} {shard_txt}")
 
 
+def _gradual_family_arch(cfg, targets):
+    """Shared driver for the per-arch-class family benches: one gradual
+    family end-to-end (hessians -> db -> SPDY search -> shrink) on a
+    non-GPT2-shaped arch, asserting every member hits its latency-table
+    speedup target, and recording how many whole layers SPDY dropped."""
+    import tempfile
+
+    from repro.core.shrink import layer_drop_plan
+
+    params, _ = model_init(cfg, jax.random.key(0))
+    ft, search, pop = (4, 3, 4) if _SMOKE else (15, 10, 8)
+    calib = calibration_batches(cfg, 8, 48, batch=8)
+    tcfg = TrainConfig(learning_rate=5e-4, warmup_steps=2, total_steps=ft,
+                       distill_logit=1.0, distill_token=0.5)
+    data = lambda step: synthetic_stream(cfg, 8, 48, seed=21,
+                                         start_step=step)
+    t0 = time.perf_counter()
+    variants = gradual_prune(
+        cfg, params, ENV, targets, data, calib, tcfg=tcfg,
+        finetune_steps=ft, search_steps=search, search_pop=pop,
+        ckpt_every=2, seed=0,
+        ckpt_dir=tempfile.mkdtemp(prefix=f"bench_gf_{cfg.family}"))
+    wall = time.perf_counter() - t0
+    dense_params = int(sum(x.size for x in jax.tree.leaves(params)))
+    rec = {"config": cfg.name, "targets": targets, "smoke": _SMOKE,
+           "wall_s": wall, "dense_params": dense_params, "members": {}}
+    for v in variants:
+        if v.achieved < v.target:
+            raise RuntimeError(
+                f"{cfg.name}: member {v.target:g}x achieved only "
+                f"{v.achieved:.2f}x against its latency table")
+        rec["members"][f"{v.target:g}x"] = {
+            "achieved_speedup": v.achieved,
+            "loss_before_ft": v.loss_before_ft,
+            "loss_after_ft": v.loss_after_ft,
+            "pruned_params": v.pruned.num_params(),
+            "layers_dropped": int(sum(layer_drop_plan(cfg, v.assignment)))}
+    return rec
+
+
+def _row_gradual_family_arch(name, rec):
+    last = rec["members"][f"{rec['targets'][-1]:g}x"]
+    row(name, rec["wall_s"] * 1e6,
+        f"achieved={last['achieved_speedup']:.2f}x "
+        f"params={rec['dense_params']}->{last['pruned_params']} "
+        f"dropped_layers={last['layers_dropped']} "
+        f"loss={last['loss_before_ft']:.3f}->{last['loss_after_ft']:.3f}")
+
+
+def bench_gradual_family_moe():
+    """MoE arch class: per-expert modules at whole-expert (keep-or-drop)
+    granularity, router kept full."""
+    cfg = smoke_config("phi3.5-moe-42b-a6.6b").replace(
+        dtype="float32", moe_prune_unit="expert")
+    rec = _gradual_family_arch(cfg, [1.3, 1.6])
+    _write_bench_db({"gradual_family_smoke_moe": rec})
+    _row_gradual_family_arch("gradual_family_moe", rec)
+
+
+def bench_gradual_family_ssm():
+    """SSM arch class: SSD-head pruning through ssd_scan (attention-free
+    mamba2, so the whole prunable surface is SSM heads)."""
+    cfg = smoke_config("mamba2-2.7b").replace(dtype="float32")
+    rec = _gradual_family_arch(cfg, [1.3, 1.6])
+    _write_bench_db({"gradual_family_smoke_ssm": rec})
+    _row_gradual_family_arch("gradual_family_ssm", rec)
+
+
+def bench_gradual_family_gqa():
+    """GQA arch class: KV heads pruned with their query-head groups (4
+    query / 2 KV heads), shrinking real KV-cache bytes."""
+    cfg = smoke_config("qwen2-72b").replace(num_kv_heads=2,
+                                            dtype="float32")
+    rec = _gradual_family_arch(cfg, [1.3, 1.6])
+    _write_bench_db({"gradual_family_smoke_gqa": rec})
+    _row_gradual_family_arch("gradual_family_gqa", rec)
+
+
 # forced 2-device device-parallel family run (sharded Algorithm-1 db
 # build + placed SPDY population + overlapped schedule) vs the
 # single-device serial reference, bit-identity asserted
@@ -1279,9 +1359,41 @@ def bench_serve():
     routed = {f"{t:g}x": r.as_dict()
               for t, r in server.run(reqs).items()}
 
+    # GQA-pruned member: KV heads pruned with their query-head groups, so
+    # the serve-side cache bytes must strictly shrink on every layer
+    from repro.models.pruned import kv_cache_bytes_per_layer
+    from repro.serve import PrunedServeModel, ServeEngine
+
+    gcfg = smoke_config("qwen2-72b").replace(num_kv_heads=2,
+                                             dtype="float32")
+    gparams, _ = model_init(gcfg, jax.random.key(0))
+    gdb = baseline_database(gcfg, gparams, kind="magnitude")
+    gmods = registry(gcfg)
+    ga = {m.name: (1 if m.kind == "attn" else 0) for m in gmods}
+    dense_pm = shrink(gcfg, gparams, gdb, {m.name: 0 for m in gmods})
+    gpm = shrink(gcfg, gparams, gdb, ga)
+    dense_pl = kv_cache_bytes_per_layer(dense_pm, nslots, max_len)
+    pruned_pl = kv_cache_bytes_per_layer(gpm, nslots, max_len)
+    for l, (d, p) in enumerate(zip(dense_pl, pruned_pl)):
+        if p >= d:
+            raise RuntimeError(
+                f"GQA member: layer {l} cache bytes {p} not strictly "
+                f"below dense {d}")
+    geng = ServeEngine(PrunedServeModel(gpm, max_len), num_slots=nslots)
+    if geng.kv_cache_bytes != sum(pruned_pl):
+        raise RuntimeError("GQA member: engine KV bytes disagree with "
+                           "per-layer plan")
+    geng.warmup((8,))
+    greqs = synthetic_requests(gcfg, n_req, seed=0, rate=200.0,
+                               prompt_lens=(8, 12, 16),
+                               steps_range=(4, 12))
+    gqa_member = geng.run(greqs).as_dict()
+    gqa_member["kv_heads_per_layer"] = kv_cache_plan(gcfg, gdb, ga)
+    gqa_member["dense_kv_cache_bytes"] = sum(dense_pl)
+
     rec = {"config": cfg.name, "targets": targets, "smoke": _SMOKE,
            "max_len": max_len, "num_slots": nslots, "requests": n_req,
-           "members": members, "routed": routed}
+           "members": members, "routed": routed, "gqa_member": gqa_member}
     _write_bench_db({("serve_smoke" if _SMOKE else "serve"): rec})
     d = members[f"{DENSE_TARGET:g}x"]
     detail = [f"dense {d['tokens_per_s']:.0f} tok/s "
@@ -1291,6 +1403,9 @@ def bench_serve():
         detail.append(f"{t:g}x {m['tokens_per_s']:.0f} tok/s "
                       f"decode={m['decode_ms_per_token_mean']:.2f}ms "
                       f"kv={m['kv_cache_bytes']//1024}KiB")
+    detail.append(f"gqa {gqa_member['tokens_per_s']:.0f} tok/s "
+                  f"kv={gqa_member['kv_cache_bytes']//1024}KiB"
+                  f"/{gqa_member['dense_kv_cache_bytes']//1024}KiB")
     row("serve", d["decode_ms_per_token_mean"] * 1e3, " | ".join(detail))
 
 
@@ -1324,6 +1439,9 @@ BENCHES = {
     "fig5": bench_fig5_scaling_law,
     "fig2": bench_fig2_gradual,
     "gradual_family": bench_gradual_family,
+    "gradual_family_moe": bench_gradual_family_moe,
+    "gradual_family_ssm": bench_gradual_family_ssm,
+    "gradual_family_gqa": bench_gradual_family_gqa,
     "family_sharded": bench_family_sharded,
     "kernels": bench_kernels,
     "db_build": bench_db_build,
@@ -1340,8 +1458,9 @@ BENCHES = {
 # benches that run on synthetic weights/hessians; no tiny-GPT2 training
 _NO_TRAIN = {"table7", "table3", "kernels", "db_build", "db_build_compact",
              "spdy_eval", "spdy_search", "calib_shard", "latency_cache",
-             "roofline", "gradual_family", "family_sharded", "chaos",
-             "serve"}
+             "roofline", "gradual_family", "gradual_family_moe",
+             "gradual_family_ssm", "gradual_family_gqa", "family_sharded",
+             "chaos", "serve"}
 
 # --smoke: shrink bench shapes/steps for the CI end-to-end pass
 # (currently honored by gradual_family; harmless elsewhere)

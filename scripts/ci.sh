@@ -24,6 +24,11 @@ python -m pytest -m chaos -q
 echo "== gradual_family smoke bench =="
 python benchmarks/run.py gradual_family --smoke
 
+echo "== gradual_family smoke benches per arch class (moe/ssm/gqa) =="
+python benchmarks/run.py gradual_family_moe --smoke
+python benchmarks/run.py gradual_family_ssm --smoke
+python benchmarks/run.py gradual_family_gqa --smoke
+
 echo "== family_sharded smoke bench (device-parallel bit-identity) =="
 python benchmarks/run.py family_sharded --smoke
 

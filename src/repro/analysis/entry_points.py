@@ -19,6 +19,12 @@ Entries (names are the budget keys in ``results/analysis/jaxpr_budget
 * ``obs.batched_step``     — the vmapped OBS pruning step
   (``core.obs.prune_structured_batched``), traced through its
   ``static_argnames``.
+* ``obs.batched_units``    — the mixed-kind batched database build: one
+  traced program running the vmapped Algorithm-1 chunk for *every*
+  shape group of a registry spanning attn + ssm + ffn PruneUnit kinds
+  (hymba), exactly the per-chunk calls ``database.build_database``
+  makes, so a kind whose grouping regresses to baked-in weights or
+  host callbacks fails here before it fails at scale.
 * ``obs.sharded_step``     — the shard_map'ed Algorithm-1 database
   build (``core.obs._sharded_prune_jit``) on a 1-device mesh: same jit
   structure (pad -> shard_map(vmap) -> slice) as the multi-device
@@ -36,6 +42,11 @@ Entries (names are the budget keys in ``results/analysis/jaxpr_budget
   HLO FLOP/byte counts rooflined on the costmodel hardware spec and
   banded against the ``LatencyTable`` prediction for the same env.
 * ``serve.decode``         — the batched decode step over slot caches.
+* ``serve.decode_gqa``     — the pruned-engine decode step on a
+  GQA-pruned member (one of two KV heads removed with its query-head
+  group, layer 1 dropped whole and stitched as identity): the shrunk
+  layer params enter as jit arguments and the dropped layer must not
+  resurrect any attention compute or cache buffers.
 * ``train.step``           — the single-device distillation train step
   with the state donation production declares off-CPU.
 """
@@ -135,6 +146,44 @@ def entry_obs_batched_step() -> EntryResult:
                     levels=(8, 16), use_kernel=False))
 
 
+def entry_obs_batched_units() -> EntryResult:
+    from repro.configs import smoke_config
+    from repro.core.database import group_modules
+    from repro.core.obs import build_hessian, prune_structured_batched
+    from repro.core.structures import get_matrix, registry
+    from repro.models import model_init
+    cfg = smoke_config("hymba-1.5b").replace(dtype="float32")
+    params = model_init(cfg, jax.random.key(0))[0]
+    mods = registry(cfg)
+    assert {"attn", "ssm", "ffn"} <= {m.kind for m in mods}
+    rng = np.random.default_rng(0)
+    metas, stacks = [], []
+    for key, gmods in group_modules(cfg, params, mods):
+        gs, _, _, levels = key
+        Ws = jnp.stack([get_matrix(cfg, params, m).astype(jnp.float32)
+                        for m in gmods])
+        d_in = gmods[0].d_in
+        X = rng.standard_normal((len(gmods), 2 * d_in + 16, d_in))
+        Hraw = jnp.asarray(np.einsum("lni,lnj->lij", X, X) / X.shape[1],
+                           jnp.float32)
+        metas.append((gs, max(levels), levels))
+        stacks.append((Ws, jnp.linalg.pinv(build_hessian(Hraw))))
+
+    def mixed(groups):
+        # every shape group of the mixed-kind registry in one program:
+        # the device portion of database.build_database's batched path
+        out = []
+        for (gs, n_remove, levels), (Ws, Hinv) in zip(metas, groups):
+            res = prune_structured_batched(
+                Ws, Hinv, group_size=gs, n_remove=n_remove,
+                levels=levels, use_kernel=False)
+            out.append((res.snapshots.astype(jnp.float16), res.errors,
+                        res.order))
+        return out
+
+    return audit_jitted("obs.batched_units", jax.jit(mixed), (stacks,))
+
+
 def entry_obs_sharded_step() -> EntryResult:
     from repro.core.obs import _sharded_prune_jit
     from repro.distributed.sharding import make_mesh
@@ -217,6 +266,28 @@ def entry_serve_decode() -> EntryResult:
     return audit_jitted("serve.decode", model._step, (params, cache, toks))
 
 
+def entry_serve_decode_gqa() -> EntryResult:
+    from repro.configs import smoke_config
+    from repro.core.magnitude import baseline_database
+    from repro.core.shrink import shrink
+    from repro.core.structures import drop_layer, registry
+    from repro.models import model_init
+    from repro.serve.engine import PrunedServeModel
+    cfg = smoke_config("qwen2-72b").replace(num_kv_heads=2,
+                                            dtype="float32")
+    params = model_init(cfg, jax.random.key(0))[0]
+    db = baseline_database(cfg, params, kind="magnitude")
+    mods = registry(cfg)
+    a = {m.name: (1 if m.kind == "attn" else 0) for m in mods}
+    a = drop_layer(a, mods, 1)  # dropped layer serves as identity
+    pm = shrink(cfg, params, db, a)
+    model = PrunedServeModel(pm, max_len=64)
+    cache = model.init_slots(4)
+    toks = jnp.zeros((4, 1), jnp.int32)
+    return audit_jitted("serve.decode_gqa", model._step,
+                        (model._lps, model._globals, cache, toks))
+
+
 def entry_train_step() -> EntryResult:
     from repro.data.synthetic import make_batch_np
     from repro.train.train_step import make_train_state, make_train_step
@@ -236,11 +307,13 @@ def entry_train_step() -> EntryResult:
 ENTRIES: Dict[str, Callable[[], EntryResult]] = {
     "hessian.fused_step": entry_hessian_fused_step,
     "obs.batched_step": entry_obs_batched_step,
+    "obs.batched_units": entry_obs_batched_units,
     "obs.sharded_step": entry_obs_sharded_step,
     "spdy.batched_eval": entry_spdy_batched_eval,
     "shrink.stitched": entry_shrink_stitched,
     "serve.prefill": entry_serve_prefill,
     "serve.decode": entry_serve_decode,
+    "serve.decode_gqa": entry_serve_decode_gqa,
     "train.step": entry_train_step,
 }
 

@@ -36,6 +36,10 @@ class ModelConfig:
     # --- MoE ---
     num_experts: int = 0
     num_experts_per_tok: int = 0
+    # pruning granularity for experts: "width" prunes per-expert FFN rows
+    # on the usual 0.9^i grid; "expert" restricts each expert's level grid
+    # to (0, d_ff) — keep-or-drop whole experts (router always kept full)
+    moe_prune_unit: str = "width"
 
     # --- SSM (Mamba-2 / SSD) ---
     ssm_state: int = 0

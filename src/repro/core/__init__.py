@@ -8,4 +8,6 @@ from .obs import (build_hessian, module_drop_error, prune_structured,
 from .oneshot import OneShotResult, PrunedVariant, oneshot_prune
 from .spdy import (SearchResult, dp_select, dp_select_batched, search,
                    search_family)
-from .structures import PrunableModule, get_matrix, level_grid, registry
+from .shrink import kv_cache_plan, layer_drop_plan, shrink
+from .structures import (UNITS, PrunableModule, PruneUnit, drop_layer,
+                         get_matrix, level_grid, registry)

@@ -32,8 +32,8 @@ from .obs import (build_hessian, module_drop_error, module_drop_errors,
                   prune_structured, prune_structured_batched,
                   prune_structured_batched_compact, prune_structured_compact,
                   prune_structured_sharded)
-from .structures import (PrunableModule, get_matrix, level_grid, registry,
-                         set_matrix)
+from .structures import (UNITS, PrunableModule, get_matrix, level_grid,
+                         registry, set_matrix)
 
 # damping-escalation ladder: retries beyond the caller's damp, each one
 # decade up (damp * 10**k) — bounded so a hopeless Hessian fails loudly
@@ -255,8 +255,9 @@ def build_database(cfg, params, hessians: Dict[str, jnp.ndarray], *,
 # device-resident snapshot cache for SPDY evaluation
 # ----------------------------------------------------------------------
 
-_PARAM_PATH = {"attn": ("attn", "wo"), "ssm": ("ssm", "out_proj"),
-               "moe": ("moe", "wd"), "ffn": ("ffn", "wd")}
+# each kind's out-side matrix location + stitch index arity come from its
+# PruneUnit (structures.py) — the cache stays kind-agnostic
+_PARAM_PATH = {kind: u.param_path for kind, u in UNITS.items()}
 
 
 def _stitch_layers_impl(leaf, snaps, lvl_idx, layer_idx):
@@ -353,7 +354,7 @@ class SnapshotCache:
                                   jnp.int32)
             grp, leaf_key = _PARAM_PATH[kind]
             leaf = layers[grp][leaf_key]
-            if kind == "moe":
+            if UNITS[kind].per_expert:
                 leaf = _stitch_experts(leaf, e["snaps"], lvl_idx,
                                        e["layer_idx"], e["expert_idx"])
             else:
@@ -391,7 +392,7 @@ class SnapshotCache:
             grp, leaf_key = _PARAM_PATH[kind]
             leaf = layers[grp][leaf_key]
             carried = (grp, leaf_key) in pop_leaves
-            if kind == "moe":
+            if UNITS[kind].per_expert:
                 fn = _stitch_experts_pop2 if carried else _stitch_experts_pop
                 leaf = fn(leaf, e["snaps"], lvl_idx, e["layer_idx"],
                           e["expert_idx"])

@@ -27,7 +27,7 @@ from ..models.layers import compute_dtype as _compute_dtype
 from ..robustness import faults as _faults
 from ..robustness.report import current_report
 from ..runtime import costmodel as cm
-from .structures import PrunableModule, level_grid, registry
+from .structures import UNITS, PrunableModule, level_grid, registry
 
 
 @dataclass
@@ -73,16 +73,13 @@ class LatencyTable:
 
 
 def _kinds_for(cfg) -> List[str]:
-    kinds = []
-    if cfg.attention != "none" and cfg.family != "ssm":
-        kinds.append("attn")
-    if cfg.ssm_state:
-        kinds.append("ssm")
-    if cfg.num_experts:
-        kinds.append("moe")
-    elif cfg.d_ff:
-        kinds.append("ffn")
-    return kinds
+    """Unit kinds with prunable modules in cfg, in UNITS order.
+
+    Derived from each ``PruneUnit``'s own registry gate so the table
+    builders can never disagree with ``structures.registry`` about which
+    kinds exist (a previous copy re-implemented the gates inline).
+    """
+    return [kind for kind, u in UNITS.items() if u.layer_modules(cfg, 0)]
 
 
 def _grid_for(cfg, kind: str) -> np.ndarray:
@@ -101,16 +98,8 @@ def build_costmodel_table(cfg, env: cm.InferenceEnv) -> LatencyTable:
     tab = LatencyTable(env=env)
     for kind in _kinds_for(cfg):
         grid = _grid_for(cfg, kind)
-        ts = []
-        for removed in grid:
-            if kind == "attn":
-                ts.append(cm.attn_time(cfg, env, cfg.num_kv_heads - removed))
-            elif kind == "ssm":
-                ts.append(cm.ssm_time(cfg, env, cfg.ssm_heads - removed))
-            elif kind == "moe":
-                ts.append(cm.moe_expert_time(cfg, env, cfg.d_ff - removed))
-            else:
-                ts.append(cm.ffn_time(cfg, env, cfg.d_ff - removed))
+        unit = UNITS[kind]
+        ts = [unit.cost_time(cfg, env, int(removed)) for removed in grid]
         tab.grids[kind] = grid
         tab.times[kind] = np.asarray(ts)
     tab.base = cm.base_time(cfg, env)
@@ -165,6 +154,25 @@ def _attn_timing_module(cfg, env: cm.InferenceEnv, groups: int, key, dt):
     return attn_mod, (x, wq, wk, wv, wo)
 
 
+def _ffn_timing_module(cfg, tokens: int, f_live: int, key, dt):
+    """The (fn, args) pair wall-clocked for one FFN-like sparsity level.
+
+    Shared by the ffn/moe/ssm units — their ``timing_spec`` reduces each
+    level to a token count and a live intermediate width (per-expert
+    tokens are the expected routed share; SSM levels are priced by the
+    live inner width through the projections, the runtime-dominant term
+    at these sizes).
+    """
+    x = jax.random.normal(key, (tokens, cfg.d_model), dt)
+    w1 = jnp.zeros((cfg.d_model, f_live), dt)
+    w2 = jnp.zeros((f_live, cfg.d_model), dt)
+
+    def ffn_mod(x, w1, w2):
+        return jax.nn.silu(x @ w1) @ w2
+
+    return ffn_mod, (x, w1, w2)
+
+
 def _time_fn(fn, *args, reps: int = 5) -> float:
     _faults.hit("latency.measure")  # injected timing failure/delay point
     TIMING_STATS["calls"] += 1
@@ -193,36 +201,20 @@ def build_measured_table(cfg, env: cm.InferenceEnv, *,
         full_grid = _grid_for(cfg, kind)
         grid = np.unique(np.concatenate(
             [full_grid[::grid_subsample], full_grid[-1:]]))
+        unit = UNITS[kind]
         ts = []
         for removed in grid:
-            if kind == "attn":
-                groups = int(cfg.num_kv_heads - removed)
-                if groups == 0:
-                    ts.append(0.0)
-                    continue
-                attn_mod, args = _attn_timing_module(cfg, env, groups,
-                                                     key, dt)
+            spec = unit.timing_spec(cfg, env, int(removed))
+            if spec is None:  # fully-dropped module: nothing to run
+                ts.append(0.0)
+            elif spec["module"] == "attn":
+                attn_mod, args = _attn_timing_module(
+                    cfg, env, spec["groups"], key, dt)
                 ts.append(_time_fn(jax.jit(attn_mod), *args, reps=reps))
             else:
-                if kind == "ssm":
-                    f_live = int(cfg.ssm_heads - removed) * cfg.ssm_head_dim
-                else:
-                    f_live = int(cfg.d_ff - removed)
-                if f_live <= 0:
-                    ts.append(0.0)
-                    continue
-                n_tok = t_tok if kind != "moe" else max(
-                    8, int(t_tok * cfg.num_experts_per_tok
-                           / cfg.num_experts * 1.25))
-                x = jax.random.normal(key, (n_tok, cfg.d_model), dt)
-                w1 = jnp.zeros((cfg.d_model, f_live), dt)
-                w2 = jnp.zeros((f_live, cfg.d_model), dt)
-
-                @jax.jit
-                def ffn_mod(x, w1, w2):
-                    return jax.nn.silu(x @ w1) @ w2
-
-                ts.append(_time_fn(ffn_mod, x, w1, w2, reps=reps))
+                ffn_mod, args = _ffn_timing_module(
+                    cfg, spec["tokens"], spec["f_live"], key, dt)
+                ts.append(_time_fn(jax.jit(ffn_mod), *args, reps=reps))
         tab.grids[kind] = grid
         tab.times[kind] = np.asarray(ts)
 

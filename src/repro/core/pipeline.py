@@ -148,7 +148,7 @@ from .latency import build_table
 from .oneshot import batched_calib_loss_fn, calib_loss_fn, make_batched_eval
 from .shrink import shrink
 from .spdy import SearchResult, search
-from .structures import registry
+from .structures import UNITS, registry
 
 
 def masks_from_assignment(cfg, params, db, assignment):
@@ -163,18 +163,8 @@ def masks_from_assignment(cfg, params, db, assignment):
         for g in kept:
             row_mask[g * gs:(g + 1) * gs] = 1.0
         mod = mdb.mod
-        layers = masks["layers"]
         rm = jnp.asarray(row_mask)[:, None]
-        if mod.kind == "attn":
-            layers["attn"]["wo"] = layers["attn"]["wo"].at[mod.layer].mul(rm)
-        elif mod.kind == "ssm":
-            layers["ssm"]["out_proj"] = \
-                layers["ssm"]["out_proj"].at[mod.layer].mul(rm)
-        elif mod.kind == "moe":
-            layers["moe"]["wd"] = \
-                layers["moe"]["wd"].at[mod.layer, mod.expert].mul(rm)
-        else:
-            layers["ffn"]["wd"] = layers["ffn"]["wd"].at[mod.layer].mul(rm)
+        UNITS[mod.kind].mask_rows(masks["layers"], mod, rm)
     return masks
 
 

@@ -1,6 +1,9 @@
 """Shrink: materialize a ZipLM assignment as a physically smaller model.
 
-Row-structures zeroed in the out-side matrix make twin weights dead:
+Row-structures zeroed in the out-side matrix make twin weights dead;
+*which* twins die with which structures is each kind's
+``PruneUnit.shrink_layer`` contract (see ``core.structures``):
+
   * attn:  removed KV groups -> slice q/k/v projection columns + wo rows
   * ffn:   removed FC2 rows  -> slice wg/wu (or wi/bi) columns + wd rows
   * moe:   per-expert as ffn; fully dropped experts keep their router
@@ -9,8 +12,18 @@ Row-structures zeroed in the out-side matrix make twin weights dead:
   * ssm:   removed SSD heads -> slice in_proj (z/x/dt), conv, A/D/dt_bias,
            gated-norm and out_proj rows
 
+A layer whose every unit is at its full-drop level shrinks to an empty
+``PrunedLayer`` — the pruned forward passes straight through it (and
+``init_cache_pruned`` allocates it no KV cache).
+
 The shrunk model must produce the *same outputs* as the masked model
 (verified by tests/test_shrink.py) — the compute simply gets smaller.
+
+``shrink`` and ``shrink_from_stitched`` are one driver over two weight
+sources: a host context (numpy fancy-indexing over masked params + DB
+snapshots) and a device context (``jnp.take`` over a stitched
+``SnapshotCache.apply`` tree, for family servers that must not pull
+params off the device).  Both produce equal ``PrunedModel``s (tested).
 """
 from __future__ import annotations
 
@@ -22,168 +35,75 @@ import numpy as np
 
 from ..models.pruned import PrunedLayer, PrunedModel
 from .database import ModuleDB
+from .structures import UNITS, _rows_for_groups, dropped_layers
+
+__all__ = ["shrink", "shrink_from_stitched", "kv_cache_plan",
+           "layer_drop_plan", "_rows_for_groups"]
 
 
-def _rows_for_groups(kept: np.ndarray, gs: int) -> np.ndarray:
-    return (kept[:, None] * gs + np.arange(gs)[None, :]).reshape(-1)
+class _HostCtx:
+    """Weight source for ``shrink``: masked params + DB snapshots, sliced
+    through host numpy (out-side matrices come from ``mdb.weights_at``)."""
+
+    def __init__(self, layers, db, assignment):
+        self.layers = layers
+        self.db = db
+        self.assignment = assignment
+
+    def take(self, a, idx, axis):
+        return jnp.asarray(np.take(np.asarray(a), np.asarray(idx),
+                                   axis=axis))
+
+    def arr(self, a):
+        return jnp.asarray(np.asarray(a))
+
+    def out_mat(self, mdb, removed, leaf):
+        return np.asarray(mdb.weights_at(removed)).astype(np.float32)
+
+    def layer_params(self, grp, l):
+        return {k: np.asarray(v[l]) for k, v in self.layers[grp].items()}
+
+    def at_layer(self, grp, l):
+        return jax.tree.map(lambda a: a[l], self.layers[grp])
 
 
-def _np(a):
-    return np.asarray(a)
+class _DeviceCtx(_HostCtx):
+    """Weight source for ``shrink_from_stitched``: the stitched tree's
+    out-side matrices already hold the per-level snapshots, so every
+    slice is a device-side ``jnp.take`` — no host round-trip."""
+
+    def take(self, a, idx, axis):
+        return jnp.take(a, jnp.asarray(idx, jnp.int32), axis=axis)
+
+    def arr(self, a):
+        return a
+
+    def out_mat(self, mdb, removed, leaf):
+        return leaf.astype(jnp.float32)
+
+    def layer_params(self, grp, l):
+        return {k: v[l] for k, v in self.layers[grp].items()}
+
+
+def _shrink_impl(cfg, tree, db, assignment, ctx_cls) -> PrunedModel:
+    ctx = ctx_cls(tree["layers"], db, assignment)
+    out_layers: List[PrunedLayer] = []
+    for l in range(cfg.num_layers):
+        lcfg = PrunedLayer()
+        lp: Dict = {}
+        for unit in UNITS.values():
+            unit.shrink_layer(cfg, ctx, l, lcfg, lp)
+        lcfg.params = lp
+        out_layers.append(lcfg)
+    globals_ = {"embed": tree["embed"], "final_norm": tree["final_norm"]}
+    if tree.get("head"):
+        globals_["head"] = tree["head"]
+    return PrunedModel(cfg=cfg, layers=out_layers, globals_=globals_)
 
 
 def shrink(cfg, params, db: Dict[str, ModuleDB],
            assignment: Dict[str, int]) -> PrunedModel:
-    dh = cfg.resolved_head_dim
-    qpk = cfg.q_per_kv
-    layers_p = params["layers"]
-    out_layers: List[PrunedLayer] = []
-
-    for l in range(cfg.num_layers):
-        lcfg = PrunedLayer()
-        lp: Dict = {}
-
-        # ---- attention ----
-        aname = f"L{l}.attn"
-        if aname in assignment:
-            mdb = db[aname]
-            removed = assignment[aname]
-            kept = mdb.kept_structures(removed)          # kv group ids
-            lcfg.kv_groups = len(kept)
-            if len(kept) > 0:
-                wo_snap = _np(mdb.weights_at(removed)).astype(np.float32)
-                q_rows = _rows_for_groups(kept, qpk * dh)
-                kv_rows = _rows_for_groups(kept, dh)
-                ap = {k: _np(v[l]) for k, v in layers_p["attn"].items()}
-                new_attn = {
-                    "wq": jnp.asarray(ap["wq"][:, q_rows]),
-                    "wk": jnp.asarray(ap["wk"][:, kv_rows]),
-                    "wv": jnp.asarray(ap["wv"][:, kv_rows]),
-                    "wo": jnp.asarray(wo_snap[q_rows, :]),
-                }
-                if cfg.qkv_bias:
-                    new_attn["bq"] = jnp.asarray(ap["bq"][q_rows])
-                    new_attn["bk"] = jnp.asarray(ap["bk"][kv_rows])
-                    new_attn["bv"] = jnp.asarray(ap["bv"][kv_rows])
-                lp["attn"] = new_attn
-                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
-
-        # ---- ssm ----
-        sname = f"L{l}.ssm"
-        if sname in assignment:
-            mdb = db[sname]
-            removed = assignment[sname]
-            kept = mdb.kept_structures(removed)          # ssd head ids
-            lcfg.ssm_heads = len(kept)
-            if len(kept) > 0:
-                hp = cfg.ssm_head_dim
-                rows = _rows_for_groups(kept, hp)        # within d_inner
-                sp = {k: _np(v[l]) for k, v in layers_p["ssm"].items()}
-                snap = _np(mdb.weights_at(removed)).astype(np.float32)
-                lp["ssm"] = {
-                    "in_z": jnp.asarray(sp["in_z"][:, rows]),
-                    "in_x": jnp.asarray(sp["in_x"][:, rows]),
-                    "in_bc": jnp.asarray(sp["in_bc"]),
-                    "in_dt": jnp.asarray(sp["in_dt"][:, kept]),
-                    "conv_x": jnp.asarray(sp["conv_x"][:, rows]),
-                    "conv_x_b": jnp.asarray(sp["conv_x_b"][rows]),
-                    "conv_bc": jnp.asarray(sp["conv_bc"]),
-                    "conv_bc_b": jnp.asarray(sp["conv_bc_b"]),
-                    "A_log": jnp.asarray(sp["A_log"][kept]),
-                    "D": jnp.asarray(sp["D"][kept]),
-                    "dt_bias": jnp.asarray(sp["dt_bias"][kept]),
-                    "norm": jnp.asarray(sp["norm"][rows]),
-                    "out_proj": jnp.asarray(snap[rows, :]),
-                }
-                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
-
-        # ---- ffn ----
-        fname = f"L{l}.ffn"
-        if fname in assignment:
-            mdb = db[fname]
-            removed = assignment[fname]
-            kept = mdb.kept_structures(removed)
-            lcfg.d_ff = len(kept)
-            if len(kept) > 0:
-                fp = {k: _np(v[l]) for k, v in layers_p["ffn"].items()}
-                snap = _np(mdb.weights_at(removed)).astype(np.float32)
-                if "wg" in fp:
-                    lp["ffn"] = {
-                        "wg": jnp.asarray(fp["wg"][:, kept]),
-                        "wu": jnp.asarray(fp["wu"][:, kept]),
-                        "wd": jnp.asarray(snap[kept, :]),
-                    }
-                else:
-                    lp["ffn"] = {
-                        "wi": jnp.asarray(fp["wi"][:, kept]),
-                        "bi": jnp.asarray(fp["bi"][kept]),
-                        "wd": jnp.asarray(snap[kept, :]),
-                        "bd": jnp.asarray(fp["bd"]),
-                    }
-                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
-
-        # ---- moe ----
-        ename = f"L{l}.expert0"
-        if ename in assignment:
-            experts = []
-            mp = layers_p["moe"]
-            for e in range(cfg.num_experts):
-                mdb = db[f"L{l}.expert{e}"]
-                removed = assignment[f"L{l}.expert{e}"]
-                kept = mdb.kept_structures(removed)
-                if len(kept) == 0:
-                    # fully-dropped expert: must stay visible to the
-                    # router — deleting its column would change which
-                    # experts win top-k (and the weight normalization)
-                    # vs the masked model, breaking the same-outputs
-                    # contract — but it carries no weights and the
-                    # pruned forward skips its compute entirely
-                    experts.append(None)
-                    lcfg.expert_ff.append(0)
-                    continue
-                snap = _np(mdb.weights_at(removed)).astype(np.float32)
-                experts.append({
-                    "wg": jnp.asarray(_np(mp["wg"][l, e])[:, kept]),
-                    "wu": jnp.asarray(_np(mp["wu"][l, e])[:, kept]),
-                    "wd": jnp.asarray(snap[kept, :]),
-                })
-                lcfg.expert_ff.append(len(kept))
-            if any(ep is not None for ep in experts):
-                lp["moe"] = {
-                    "router": jnp.asarray(_np(mp["router"][l])),
-                    "experts": experts,
-                }
-                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
-            else:
-                lcfg.expert_ff = []  # whole MoE module dropped
-
-        lcfg.params = lp
-        out_layers.append(lcfg)
-
-    globals_ = {"embed": params["embed"],
-                "final_norm": params["final_norm"]}
-    if params.get("head"):
-        globals_["head"] = params["head"]
-    return PrunedModel(cfg=cfg, layers=out_layers, globals_=globals_)
-
-
-def kv_cache_plan(cfg, db: Dict[str, ModuleDB],
-                  assignment: Dict[str, int]) -> List[int]:
-    """Per-layer KV-head counts the shrunk model needs at serving time.
-
-    Feed this to ``transformer.init_cache(kv_heads=...)`` (or let
-    ``models.pruned.init_cache_pruned`` derive it) so the KV cache is sized
-    by the *pruned* structure — entry 0 means the layer's attention module
-    is gone and allocates no cache at all.
-    """
-    plan: List[int] = []
-    for l in range(cfg.num_layers):
-        aname = f"L{l}.attn"
-        if aname in assignment:
-            plan.append(len(db[aname].kept_structures(assignment[aname])))
-        else:
-            plan.append(cfg.num_kv_heads if cfg.attention != "none" else 0)
-    return plan
+    return _shrink_impl(cfg, params, db, assignment, _HostCtx)
 
 
 def shrink_from_stitched(cfg, stitched, db: Dict[str, ModuleDB],
@@ -196,114 +116,27 @@ def shrink_from_stitched(cfg, stitched, db: Dict[str, ModuleDB],
     materialize a member without pulling params off the device. Produces
     the same ``PrunedModel`` as ``shrink`` (tested for equality).
     """
-    dh = cfg.resolved_head_dim
-    qpk = cfg.q_per_kv
-    layers_p = stitched["layers"]
-    out_layers: List[PrunedLayer] = []
+    return _shrink_impl(cfg, stitched, db, assignment, _DeviceCtx)
 
-    def take(a, idx, axis):
-        return jnp.take(a, jnp.asarray(idx, jnp.int32), axis=axis)
 
-    for l in range(cfg.num_layers):
-        lcfg = PrunedLayer()
-        lp: Dict = {}
+def kv_cache_plan(cfg, db: Dict[str, ModuleDB],
+                  assignment: Dict[str, int]) -> List[int]:
+    """Per-layer KV-head counts the shrunk model needs at serving time.
 
-        aname = f"L{l}.attn"
-        if aname in assignment:
-            kept = db[aname].kept_structures(assignment[aname])
-            lcfg.kv_groups = len(kept)
-            if len(kept) > 0:
-                q_rows = _rows_for_groups(kept, qpk * dh)
-                kv_rows = _rows_for_groups(kept, dh)
-                ap = {k: v[l] for k, v in layers_p["attn"].items()}
-                new_attn = {
-                    "wq": take(ap["wq"], q_rows, 1),
-                    "wk": take(ap["wk"], kv_rows, 1),
-                    "wv": take(ap["wv"], kv_rows, 1),
-                    "wo": take(ap["wo"].astype(jnp.float32), q_rows, 0),
-                }
-                if cfg.qkv_bias:
-                    new_attn["bq"] = take(ap["bq"], q_rows, 0)
-                    new_attn["bk"] = take(ap["bk"], kv_rows, 0)
-                    new_attn["bv"] = take(ap["bv"], kv_rows, 0)
-                lp["attn"] = new_attn
-                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
+    Feed this to ``transformer.init_cache(kv_heads=...)`` (or let
+    ``models.pruned.init_cache_pruned`` derive it) so the KV cache is sized
+    by the *pruned* structure — entry 0 means the layer's attention module
+    is gone (or the whole layer dropped) and allocates no cache at all.
+    Each unit contributes through ``PruneUnit.kv_heads``; only GQA/MHA
+    attention holds KV state today, but the plan stays correct if a
+    future kind does.
+    """
+    return [sum(u.kv_heads(cfg, db, assignment, l) for u in UNITS.values())
+            for l in range(cfg.num_layers)]
 
-        sname = f"L{l}.ssm"
-        if sname in assignment:
-            kept = db[sname].kept_structures(assignment[sname])
-            lcfg.ssm_heads = len(kept)
-            if len(kept) > 0:
-                hp = cfg.ssm_head_dim
-                rows = _rows_for_groups(kept, hp)
-                sp = {k: v[l] for k, v in layers_p["ssm"].items()}
-                lp["ssm"] = {
-                    "in_z": take(sp["in_z"], rows, 1),
-                    "in_x": take(sp["in_x"], rows, 1),
-                    "in_bc": sp["in_bc"],
-                    "in_dt": take(sp["in_dt"], kept, 1),
-                    "conv_x": take(sp["conv_x"], rows, 1),
-                    "conv_x_b": take(sp["conv_x_b"], rows, 0),
-                    "conv_bc": sp["conv_bc"],
-                    "conv_bc_b": sp["conv_bc_b"],
-                    "A_log": take(sp["A_log"], kept, 0),
-                    "D": take(sp["D"], kept, 0),
-                    "dt_bias": take(sp["dt_bias"], kept, 0),
-                    "norm": take(sp["norm"], rows, 0),
-                    "out_proj": take(sp["out_proj"].astype(jnp.float32),
-                                     rows, 0),
-                }
-                lp["ln1"] = jax.tree.map(lambda a: a[l], layers_p["ln1"])
 
-        fname = f"L{l}.ffn"
-        if fname in assignment:
-            kept = db[fname].kept_structures(assignment[fname])
-            lcfg.d_ff = len(kept)
-            if len(kept) > 0:
-                fp = {k: v[l] for k, v in layers_p["ffn"].items()}
-                if "wg" in fp:
-                    lp["ffn"] = {
-                        "wg": take(fp["wg"], kept, 1),
-                        "wu": take(fp["wu"], kept, 1),
-                        "wd": take(fp["wd"].astype(jnp.float32), kept, 0),
-                    }
-                else:
-                    lp["ffn"] = {
-                        "wi": take(fp["wi"], kept, 1),
-                        "bi": take(fp["bi"], kept, 0),
-                        "wd": take(fp["wd"].astype(jnp.float32), kept, 0),
-                        "bd": fp["bd"],
-                    }
-                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
-
-        ename = f"L{l}.expert0"
-        if ename in assignment:
-            experts = []
-            mp = layers_p["moe"]
-            for e in range(cfg.num_experts):
-                kept = db[f"L{l}.expert{e}"].kept_structures(
-                    assignment[f"L{l}.expert{e}"])
-                if len(kept) == 0:
-                    experts.append(None)
-                    lcfg.expert_ff.append(0)
-                    continue
-                experts.append({
-                    "wg": take(mp["wg"][l, e], kept, 1),
-                    "wu": take(mp["wu"][l, e], kept, 1),
-                    "wd": take(mp["wd"][l, e].astype(jnp.float32), kept, 0),
-                })
-                lcfg.expert_ff.append(len(kept))
-            if any(ep is not None for ep in experts):
-                lp["moe"] = {"router": mp["router"][l], "experts": experts}
-                lp["ln2"] = jax.tree.map(lambda a: a[l], layers_p["ln2"])
-            else:
-                lcfg.expert_ff = []
-
-        lcfg.params = lp
-        out_layers.append(lcfg)
-
-    globals_ = {"embed": stitched["embed"],
-                "final_norm": stitched["final_norm"]}
-    if stitched.get("head"):
-        globals_["head"] = stitched["head"]
-    return PrunedModel(cfg=cfg, layers=out_layers, globals_=globals_)
+def layer_drop_plan(cfg, assignment: Dict[str, int]) -> List[bool]:
+    """Per-layer whole-layer-drop flags for an assignment: True iff every
+    prunable unit of the layer sits at its full-drop level, i.e. the
+    shrunk model stitches the layer as an identity/passthrough block."""
+    return dropped_layers(cfg, assignment)

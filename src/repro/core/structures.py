@@ -1,100 +1,443 @@
-"""Structure registry: which weight matrices are prunable, at what
-granularity, and how twin weights shrink with them.
+"""The ``PruneUnit`` protocol: every prunable structure kind, one contract.
 
-ZipLM's generalized structure = a group of *input features* (rows, in our
+ZipLM's generalized structure is "a group of input features (rows, in our
 ``y = x @ W`` convention) of a projection whose output feeds the residual
-stream:
+stream".  Everything the pipeline does to such a structure — capture its
+calibration inputs, run Algorithm 1 over its level grid, stitch a
+snapshot back, price a level in the latency table, materialize the
+physically smaller model, size the serving KV cache — used to be smeared
+as ``if mod.kind == ...`` branches across six modules.  It now lives here
+as one :class:`PruneUnit` implementation per kind (the ``UNITS``
+registry), each answering the same six questions:
 
-  * attention:  ``W_o``  — one group per KV head (= q_per_kv query heads x
-    head_dim rows). For MHA (q_per_kv == 1) this is exactly the paper's
-    "d_head consecutive columns of the out-matrix"; for GQA we prune whole
-    KV groups so K/V projections shrink consistently (DESIGN.md §4).
-  * FFN:        ``W_down`` — single-row groups (paper's FC2 columns).
-  * MoE:        per-expert ``W_down`` — single-row groups per expert.
-  * SSD (Mamba-2): ``out_proj`` — one group per SSD head (head_dim rows).
+========== ===========================================================
+contract   answered by
+========== ===========================================================
+capture    ``get_capture`` — which forward capture feeds the out-side
+           matrix (Hessian key(s); MoE adds a per-expert validity mask)
+weights    ``param_path`` + ``get_matrix``/``set_matrix``/``mask_rows``
+           — where the out-side matrix lives in the param tree (and the
+           stitch/mask index: per-layer, or per-(layer, expert))
+levels     ``grid`` — the sparsity-level grid in "structures removed"
+           counts; **every grid ends at ``n_structures`` = full module
+           drop**, so whole-layer dropping is simply every unit of a
+           layer at its coarsest level (stitched as identity /
+           passthrough by the pruned runtime)
+latency    ``cost_time`` (analytic roofline) + ``timing_spec`` (what to
+           wall-clock for the measured backend); a fully-dropped level
+           must price to ~0 so SPDY can buy whole-module and
+           whole-layer drops at aggressive targets
+shrink     ``shrink_layer`` — which twin weights die with the removed
+           structures (the masked-vs-shrunk same-outputs contract)
+KV cache   ``kv_heads`` — the unit's per-layer KV-head contribution
+           (``shrink.kv_cache_plan``; the serving engine's currency)
+========== ===========================================================
 
-Pruning the whole module (all groups) = the paper's residual-module drop.
+The four kinds:
+
+  * ``attn`` — ``W_o``, one group per KV head (= q_per_kv query heads x
+    head_dim rows).  For MHA this is exactly the paper's "d_head
+    consecutive columns of the out-matrix"; for GQA each level removes a
+    whole KV head *with its query-head group*, so K/V projections — and
+    the per-layer KV-cache bytes — shrink consistently (DESIGN.md §4).
+  * ``ssm`` (Mamba-2/SSD) — ``out_proj``, one group per SSD head
+    (head_dim rows); in_proj/conv/A/D/dt/norm twins shrink with it
+    through ``ssd_scan``.
+  * ``moe`` — per-expert ``W_down`` rows.  Granularity is selected by
+    ``cfg.moe_prune_unit``: ``"width"`` (default) prunes per-expert FFN
+    width on the 0.9^i grid; ``"expert"`` restricts each expert's grid
+    to ``(0, d_ff)`` — keep-or-drop whole experts.  Either way a fully
+    dropped expert keeps its router column (masked-equivalence
+    contract) but carries no weights and costs no FLOPs.
+  * ``ffn`` — ``W_down``, single-row groups (paper's FC2 columns).
+
+Pruning the whole module (all groups) = the paper's residual-module
+drop; dropping every module of a layer = whole-layer drop (CoFi-style).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime import costmodel as cm
+
 
 @dataclass(frozen=True)
 class PrunableModule:
     name: str                 # "L{layer}.{kind}" or "L{layer}.expert{e}"
-    kind: str                 # attn | xattn | ffn | moe | ssm
+    kind: str                 # attn | ffn | moe | ssm
     layer: int
     expert: int = -1          # >= 0 for per-expert modules
     weight_key: str = ""      # leaf name of the out-side matrix ("wo"/"wd"/...)
     capture_key: str = ""     # capture feeding this matrix
     group_size: int = 1
     n_structures: int = 0
+    levels: Optional[Tuple[int, ...]] = None  # pinned grid (None = default)
 
     @property
     def d_in(self) -> int:
         return self.group_size * self.n_structures
 
 
+class PruneUnit:
+    """One structure kind's contract with every pipeline layer.
+
+    Subclasses are stateless singletons registered in ``UNITS``; all
+    per-instance facts travel in the :class:`PrunableModule` (and the
+    ``ModelConfig``).  The generic weight accessors derive from
+    ``param_path`` + ``per_expert`` so a new kind only overrides what is
+    genuinely different about it.
+    """
+
+    kind: str = ""
+    param_path: Tuple[str, str] = ("", "")   # (group, leaf) under "layers"
+    per_expert: bool = False                 # leaf carries an (L, E, ...) axis
+
+    # ---- registry ----
+    def layer_modules(self, cfg, layer: int) -> List[PrunableModule]:
+        """Prunable modules this unit contributes at one layer."""
+        raise NotImplementedError
+
+    # ---- weights (out-side matrix) ----
+    def _index(self, mod: PrunableModule):
+        return (mod.layer, mod.expert) if self.per_expert else mod.layer
+
+    def get_matrix(self, params, mod: PrunableModule):
+        grp, leaf = self.param_path
+        return params["layers"][grp][leaf][self._index(mod)]
+
+    def set_matrix(self, layers, mod: PrunableModule, w) -> None:
+        grp, leaf = self.param_path
+        layers[grp][leaf] = layers[grp][leaf].at[self._index(mod)].set(w)
+
+    def mask_rows(self, layers, mod: PrunableModule, row_mask) -> None:
+        """Scale the out-side matrix rows in a params-shaped mask tree."""
+        grp, leaf = self.param_path
+        layers[grp][leaf] = \
+            layers[grp][leaf].at[self._index(mod)].mul(row_mask)
+
+    # ---- Hessian capture ----
+    def get_capture(self, layer_caps, mod: PrunableModule):
+        """(X, valid) for one layer's captures; X: (N, d_in) row-major."""
+        raise NotImplementedError
+
+    # ---- level grid ----
+    def grid(self, mod: PrunableModule, steps: int = 43) -> List[int]:
+        """Sparsity levels as 'structures removed' counts, ascending.
+
+        A pinned ``mod.levels`` wins (e.g. the MoE whole-expert grid);
+        otherwise: head-granular modules get 0..n (paper: 0..N_heads-1
+        heads pruned + drop), FFN-like modules the paper's Appendix E
+        0.9^i sizes (+ drop).  The last level is always ``n_structures``
+        — the full module drop every grid must be able to buy.
+        """
+        if mod.levels is not None:
+            return list(mod.levels)
+        n = mod.n_structures
+        if mod.group_size > 1 or n <= 64:
+            return list(range(n + 1))
+        sizes = sorted({int(np.ceil(n * 0.9 ** i)) for i in range(steps)}
+                       | {0}, reverse=True)
+        return [n - s for s in sizes]  # removed counts, ascending
+
+    # ---- latency-table entries ----
+    def cost_time(self, cfg, env, removed: int) -> float:
+        """Analytic roofline seconds at a level (0.0 at full drop)."""
+        raise NotImplementedError
+
+    def timing_spec(self, cfg, env, removed: int) -> Optional[Dict]:
+        """What the measured backend should wall-clock at a level.
+
+        ``None`` means the level costs nothing (dropped module);
+        otherwise ``{"module": "attn", "groups": g}`` or ``{"module":
+        "ffn", "f_live": f, "tokens": n}`` — latency.py owns the actual
+        jitted timing modules.
+        """
+        raise NotImplementedError
+
+    # ---- serving ----
+    def kv_heads(self, cfg, db, assignment, layer: int) -> int:
+        """This unit's KV-head contribution to one layer's cache plan."""
+        return 0
+
+    # ---- shrink ----
+    def shrink_layer(self, cfg, ctx, layer: int, lcfg, lp) -> None:
+        """Materialize this unit's shrunk weights for one layer.
+
+        ``ctx`` abstracts the host (numpy fancy-index over masked
+        params + DB snapshots) and device (``jnp.take`` over a stitched
+        tree) sources — see ``core.shrink``.  Writes the surviving
+        twin-weight slices into ``lp`` and the structural counts onto
+        ``lcfg`` (a ``models.pruned.PrunedLayer``).
+        """
+        raise NotImplementedError
+
+
+def _rows_for_groups(kept: np.ndarray, gs: int) -> np.ndarray:
+    return (kept[:, None] * gs + np.arange(gs)[None, :]).reshape(-1)
+
+
+class AttnUnit(PruneUnit):
+    kind = "attn"
+    param_path = ("attn", "wo")
+
+    def layer_modules(self, cfg, layer):
+        if cfg.attention == "none" or cfg.family == "ssm":
+            return []
+        return [PrunableModule(
+            name=f"L{layer}.attn", kind="attn", layer=layer,
+            weight_key="wo", capture_key="wo_in",
+            group_size=cfg.q_per_kv * cfg.resolved_head_dim,
+            n_structures=cfg.num_kv_heads)]
+
+    def get_capture(self, layer_caps, mod):
+        x = layer_caps["attn"]["wo_in"]
+        return x.reshape(-1, x.shape[-1]), None
+
+    def cost_time(self, cfg, env, removed):
+        return cm.attn_time(cfg, env, cfg.num_kv_heads - removed)
+
+    def timing_spec(self, cfg, env, removed):
+        groups = int(cfg.num_kv_heads - removed)
+        if groups <= 0:
+            return None
+        return {"module": "attn", "groups": groups}
+
+    def kv_heads(self, cfg, db, assignment, layer):
+        name = f"L{layer}.attn"
+        if name in assignment:
+            return len(db[name].kept_structures(assignment[name]))
+        return cfg.num_kv_heads if self.layer_modules(cfg, layer) else 0
+
+    def shrink_layer(self, cfg, ctx, layer, lcfg, lp):
+        name = f"L{layer}.attn"
+        if name not in ctx.assignment:
+            return
+        mdb = ctx.db[name]
+        removed = ctx.assignment[name]
+        kept = mdb.kept_structures(removed)          # kv group ids
+        lcfg.kv_groups = len(kept)
+        if len(kept) == 0:
+            return
+        dh = cfg.resolved_head_dim
+        q_rows = _rows_for_groups(kept, cfg.q_per_kv * dh)
+        kv_rows = _rows_for_groups(kept, dh)
+        ap = ctx.layer_params("attn", layer)
+        new_attn = {
+            "wq": ctx.take(ap["wq"], q_rows, 1),
+            "wk": ctx.take(ap["wk"], kv_rows, 1),
+            "wv": ctx.take(ap["wv"], kv_rows, 1),
+            "wo": ctx.take(ctx.out_mat(mdb, removed, ap["wo"]), q_rows, 0),
+        }
+        if cfg.qkv_bias:
+            new_attn["bq"] = ctx.take(ap["bq"], q_rows, 0)
+            new_attn["bk"] = ctx.take(ap["bk"], kv_rows, 0)
+            new_attn["bv"] = ctx.take(ap["bv"], kv_rows, 0)
+        lp["attn"] = new_attn
+        lp["ln1"] = ctx.at_layer("ln1", layer)
+
+
+class SsmUnit(PruneUnit):
+    kind = "ssm"
+    param_path = ("ssm", "out_proj")
+
+    def layer_modules(self, cfg, layer):
+        if not cfg.ssm_state:
+            return []
+        return [PrunableModule(
+            name=f"L{layer}.ssm", kind="ssm", layer=layer,
+            weight_key="out_proj", capture_key="ssm_out_in",
+            group_size=cfg.ssm_head_dim, n_structures=cfg.ssm_heads)]
+
+    def get_capture(self, layer_caps, mod):
+        x = layer_caps["ssm_out_in"]
+        return x.reshape(-1, x.shape[-1]), None
+
+    def cost_time(self, cfg, env, removed):
+        return cm.ssm_time(cfg, env, cfg.ssm_heads - removed)
+
+    def timing_spec(self, cfg, env, removed):
+        f_live = int(cfg.ssm_heads - removed) * cfg.ssm_head_dim
+        if f_live <= 0:
+            return None
+        return {"module": "ffn", "f_live": f_live, "tokens": env.tokens}
+
+    def shrink_layer(self, cfg, ctx, layer, lcfg, lp):
+        name = f"L{layer}.ssm"
+        if name not in ctx.assignment:
+            return
+        mdb = ctx.db[name]
+        removed = ctx.assignment[name]
+        kept = mdb.kept_structures(removed)          # ssd head ids
+        lcfg.ssm_heads = len(kept)
+        if len(kept) == 0:
+            return
+        rows = _rows_for_groups(kept, cfg.ssm_head_dim)  # within d_inner
+        sp = ctx.layer_params("ssm", layer)
+        lp["ssm"] = {
+            "in_z": ctx.take(sp["in_z"], rows, 1),
+            "in_x": ctx.take(sp["in_x"], rows, 1),
+            "in_bc": ctx.arr(sp["in_bc"]),
+            "in_dt": ctx.take(sp["in_dt"], kept, 1),
+            "conv_x": ctx.take(sp["conv_x"], rows, 1),
+            "conv_x_b": ctx.take(sp["conv_x_b"], rows, 0),
+            "conv_bc": ctx.arr(sp["conv_bc"]),
+            "conv_bc_b": ctx.arr(sp["conv_bc_b"]),
+            "A_log": ctx.take(sp["A_log"], kept, 0),
+            "D": ctx.take(sp["D"], kept, 0),
+            "dt_bias": ctx.take(sp["dt_bias"], kept, 0),
+            "norm": ctx.take(sp["norm"], rows, 0),
+            "out_proj": ctx.take(ctx.out_mat(mdb, removed, sp["out_proj"]),
+                                 rows, 0),
+        }
+        lp["ln1"] = ctx.at_layer("ln1", layer)
+
+
+class MoeUnit(PruneUnit):
+    kind = "moe"
+    param_path = ("moe", "wd")
+    per_expert = True
+
+    def layer_modules(self, cfg, layer):
+        if not cfg.num_experts:
+            return []
+        # whole-expert granularity: pin each expert's grid to keep-or-drop
+        levels = ((0, cfg.d_ff)
+                  if cfg.moe_prune_unit == "expert" else None)
+        return [PrunableModule(
+            name=f"L{layer}.expert{e}", kind="moe", layer=layer, expert=e,
+            weight_key="wd", capture_key="wd_in", group_size=1,
+            n_structures=cfg.d_ff, levels=levels)
+            for e in range(cfg.num_experts)]
+
+    def get_capture(self, layer_caps, mod):
+        x = layer_caps["ffn"]["wd_in"][mod.expert]       # (C, f)
+        valid = layer_caps["ffn"]["wd_valid"][mod.expert]
+        return x, valid
+
+    def cost_time(self, cfg, env, removed):
+        return cm.moe_expert_time(cfg, env, cfg.d_ff - removed)
+
+    def timing_spec(self, cfg, env, removed):
+        f_live = int(cfg.d_ff - removed)
+        if f_live <= 0:
+            return None
+        tokens = max(8, int(env.tokens * cfg.num_experts_per_tok
+                            / cfg.num_experts * 1.25))
+        return {"module": "ffn", "f_live": f_live, "tokens": tokens}
+
+    def shrink_layer(self, cfg, ctx, layer, lcfg, lp):
+        if f"L{layer}.expert0" not in ctx.assignment:
+            return
+        experts = []
+        mp = ctx.layers["moe"]
+        for e in range(cfg.num_experts):
+            name = f"L{layer}.expert{e}"
+            mdb = ctx.db[name]
+            removed = ctx.assignment[name]
+            kept = mdb.kept_structures(removed)
+            if len(kept) == 0:
+                # fully-dropped expert: must stay visible to the router —
+                # deleting its column would change which experts win
+                # top-k (and the weight normalization) vs the masked
+                # model, breaking the same-outputs contract — but it
+                # carries no weights and the pruned forward skips its
+                # compute entirely
+                experts.append(None)
+                lcfg.expert_ff.append(0)
+                continue
+            experts.append({
+                "wg": ctx.take(mp["wg"][layer, e], kept, 1),
+                "wu": ctx.take(mp["wu"][layer, e], kept, 1),
+                "wd": ctx.take(
+                    ctx.out_mat(mdb, removed, mp["wd"][layer, e]), kept, 0),
+            })
+            lcfg.expert_ff.append(len(kept))
+        if any(ep is not None for ep in experts):
+            lp["moe"] = {"router": ctx.arr(mp["router"][layer]),
+                         "experts": experts}
+            lp["ln2"] = ctx.at_layer("ln2", layer)
+        else:
+            lcfg.expert_ff = []  # whole MoE module dropped
+
+
+class FfnUnit(PruneUnit):
+    kind = "ffn"
+    param_path = ("ffn", "wd")
+
+    def layer_modules(self, cfg, layer):
+        if cfg.num_experts or not cfg.d_ff:
+            return []
+        return [PrunableModule(
+            name=f"L{layer}.ffn", kind="ffn", layer=layer,
+            weight_key="wd", capture_key="wd_in", group_size=1,
+            n_structures=cfg.d_ff)]
+
+    def get_capture(self, layer_caps, mod):
+        x = layer_caps["ffn"]["wd_in"]
+        return x.reshape(-1, x.shape[-1]), None
+
+    def cost_time(self, cfg, env, removed):
+        return cm.ffn_time(cfg, env, cfg.d_ff - removed)
+
+    def timing_spec(self, cfg, env, removed):
+        f_live = int(cfg.d_ff - removed)
+        if f_live <= 0:
+            return None
+        return {"module": "ffn", "f_live": f_live, "tokens": env.tokens}
+
+    def shrink_layer(self, cfg, ctx, layer, lcfg, lp):
+        name = f"L{layer}.ffn"
+        if name not in ctx.assignment:
+            return
+        mdb = ctx.db[name]
+        removed = ctx.assignment[name]
+        kept = mdb.kept_structures(removed)
+        lcfg.d_ff = len(kept)
+        if len(kept) == 0:
+            return
+        fp = ctx.layer_params("ffn", layer)
+        wd = ctx.take(ctx.out_mat(mdb, removed, fp["wd"]), kept, 0)
+        if "wg" in fp:
+            lp["ffn"] = {"wg": ctx.take(fp["wg"], kept, 1),
+                         "wu": ctx.take(fp["wu"], kept, 1),
+                         "wd": wd}
+        else:
+            lp["ffn"] = {"wi": ctx.take(fp["wi"], kept, 1),
+                         "bi": ctx.take(fp["bi"], kept, 0),
+                         "wd": wd,
+                         "bd": ctx.arr(fp["bd"])}
+        lp["ln2"] = ctx.at_layer("ln2", layer)
+
+
+# kind -> singleton; iteration order is the within-layer registry order
+UNITS: Dict[str, PruneUnit] = {
+    u.kind: u for u in (AttnUnit(), SsmUnit(), MoeUnit(), FfnUnit())}
+
+
+# ----------------------------------------------------------------------
+# module-level API (kept stable across the PruneUnit refactor)
+# ----------------------------------------------------------------------
+
 def registry(cfg) -> List[PrunableModule]:
     """Enumerate prunable modules for a model config."""
-    mods: List[PrunableModule] = []
-    dh = cfg.resolved_head_dim
-    for l in range(cfg.num_layers):
-        if cfg.attention != "none" and cfg.family != "ssm":
-            mods.append(PrunableModule(
-                name=f"L{l}.attn", kind="attn", layer=l, weight_key="wo",
-                capture_key="wo_in", group_size=cfg.q_per_kv * dh,
-                n_structures=cfg.num_kv_heads))
-        if cfg.ssm_state:
-            mods.append(PrunableModule(
-                name=f"L{l}.ssm", kind="ssm", layer=l, weight_key="out_proj",
-                capture_key="ssm_out_in", group_size=cfg.ssm_head_dim,
-                n_structures=cfg.ssm_heads))
-        if cfg.num_experts:
-            for e in range(cfg.num_experts):
-                mods.append(PrunableModule(
-                    name=f"L{l}.expert{e}", kind="moe", layer=l, expert=e,
-                    weight_key="wd", capture_key="wd_in", group_size=1,
-                    n_structures=cfg.d_ff))
-        elif cfg.d_ff:
-            mods.append(PrunableModule(
-                name=f"L{l}.ffn", kind="ffn", layer=l, weight_key="wd",
-                capture_key="wd_in", group_size=1, n_structures=cfg.d_ff))
-    return mods
+    return [m for l in range(cfg.num_layers)
+            for u in UNITS.values() for m in u.layer_modules(cfg, l)]
 
 
 def get_matrix(cfg, params, mod: PrunableModule) -> jnp.ndarray:
     """Extract the (d_in, d_out) out-side matrix for a prunable module."""
-    layers = params["layers"]
-    if mod.kind == "attn":
-        return layers["attn"]["wo"][mod.layer]
-    if mod.kind == "ssm":
-        return layers["ssm"]["out_proj"][mod.layer]
-    if mod.kind == "moe":
-        return layers["moe"]["wd"][mod.layer, mod.expert]
-    return layers["ffn"]["wd"][mod.layer]
+    return UNITS[mod.kind].get_matrix(params, mod)
 
 
 def set_matrix(cfg, params, mod: PrunableModule, w) -> Dict:
     """Functionally replace the out-side matrix (returns new params tree)."""
     params = jax.tree.map(lambda a: a, params)  # shallow-ish copy of dicts
-    layers = params["layers"]
-    if mod.kind == "attn":
-        layers["attn"]["wo"] = layers["attn"]["wo"].at[mod.layer].set(w)
-    elif mod.kind == "ssm":
-        layers["ssm"]["out_proj"] = \
-            layers["ssm"]["out_proj"].at[mod.layer].set(w)
-    elif mod.kind == "moe":
-        layers["moe"]["wd"] = \
-            layers["moe"]["wd"].at[mod.layer, mod.expert].set(w)
-    else:
-        layers["ffn"]["wd"] = layers["ffn"]["wd"].at[mod.layer].set(w)
+    UNITS[mod.kind].set_matrix(params["layers"], mod, w)
     return params
 
 
@@ -104,30 +447,36 @@ def get_capture(captures: Dict, mod: PrunableModule):
     Returns (X, valid) where X: (N, d_in) row-major samples.
     """
     layer_caps = jax.tree.map(lambda a: a[mod.layer], captures)
-    if mod.kind == "attn":
-        x = layer_caps["attn"]["wo_in"]
-        return x.reshape(-1, x.shape[-1]), None
-    if mod.kind == "ssm":
-        x = layer_caps["ssm_out_in"]
-        return x.reshape(-1, x.shape[-1]), None
-    if mod.kind == "moe":
-        x = layer_caps["ffn"]["wd_in"][mod.expert]       # (C, f)
-        valid = layer_caps["ffn"]["wd_valid"][mod.expert]
-        return x, valid
-    x = layer_caps["ffn"]["wd_in"]
-    return x.reshape(-1, x.shape[-1]), None
+    return UNITS[mod.kind].get_capture(layer_caps, mod)
 
 
 def level_grid(mod: PrunableModule, steps: int = 43) -> List[int]:
-    """Sparsity levels as 'structures removed' counts.
+    """Sparsity levels as 'structures removed' counts (see PruneUnit.grid)."""
+    return UNITS[mod.kind].grid(mod, steps)
 
-    Head-granular modules: 0..n (paper: 0..N_heads-1 heads pruned + drop).
-    FFN-like: intermediate size shrunk by 0.9^i for i=0..steps-1 (+ drop),
-    following the paper's Appendix E grid.
-    """
-    n = mod.n_structures
-    if mod.group_size > 1 or n <= 64:
-        return list(range(n + 1))
-    sizes = sorted({int(np.ceil(n * 0.9 ** i)) for i in range(steps)} | {0},
-                   reverse=True)
-    return [n - s for s in sizes]  # removed counts, ascending
+
+# ----------------------------------------------------------------------
+# whole-layer dropping
+# ----------------------------------------------------------------------
+
+def drop_layer(assignment: Dict[str, int], mods: List[PrunableModule],
+               layer: int) -> Dict[str, int]:
+    """Copy of ``assignment`` with every module of ``layer`` at its full
+    drop level — the coarsest point of every per-layer grid.  The pruned
+    runtime stitches such a layer as an identity/passthrough block."""
+    a = dict(assignment)
+    for m in mods:
+        if m.layer == layer:
+            a[m.name] = m.n_structures
+    return a
+
+
+def dropped_layers(cfg, assignment: Dict[str, int]) -> List[bool]:
+    """Per-layer whole-layer-drop flags: True iff the layer has prunable
+    modules and the assignment removes every structure of every one."""
+    out = []
+    for l in range(cfg.num_layers):
+        lm = [m for u in UNITS.values() for m in u.layer_modules(cfg, l)]
+        out.append(bool(lm) and all(
+            assignment.get(m.name, 0) >= m.n_structures for m in lm))
+    return out

@@ -184,14 +184,27 @@ def init_cache_pruned(pm: PrunedModel, batch: int, max_len: int, dtype=None,
                       per_slot=per_slot)
 
 
+def kv_cache_bytes_per_layer(pm: PrunedModel, batch: int, max_len: int,
+                             dtype=None) -> List[int]:
+    """Per-layer byte footprint of ``init_cache_pruned``'s k/v buffers.
+
+    0 for layers whose attention module is pruned away or whose whole
+    layer is dropped — those allocate no cache at all.  KV-head pruning
+    (GQA levels remove whole KV heads with their query groups) makes
+    these entries strictly shrink; that is the serving-side win the
+    serve tests/bench assert per layer.
+    """
+    itemsize = jnp.dtype(dtype or compute_dtype(pm.cfg)).itemsize
+    dh = pm.cfg.resolved_head_dim
+    return [2 * batch * max_len * l.kv_groups * dh * itemsize
+            if (l.kv_groups > 0 and "attn" in l.params) else 0
+            for l in pm.layers]
+
+
 def kv_cache_bytes(pm: PrunedModel, batch: int, max_len: int,
                    dtype=None) -> int:
     """Exact byte footprint of ``init_cache_pruned``'s k/v buffers."""
-    itemsize = jnp.dtype(dtype or compute_dtype(pm.cfg)).itemsize
-    dh = pm.cfg.resolved_head_dim
-    return sum(2 * batch * max_len * l.kv_groups * dh * itemsize
-               for l in pm.layers
-               if l.kv_groups > 0 and "attn" in l.params)
+    return sum(kv_cache_bytes_per_layer(pm, batch, max_len, dtype))
 
 
 def prefill_pruned(pm: PrunedModel, tokens, max_len: int, *,

@@ -144,6 +144,21 @@ def ssm_time(cfg, env: InferenceEnv, heads: int) -> float:
     return t
 
 
+def kv_cache_bytes(cfg, kv_heads_plan, batch: int, max_len: int,
+                   bytes_per_el: int = 2) -> int:
+    """Total KV-cache bytes for a per-layer KV-head plan (K + V buffers).
+
+    ``kv_heads_plan`` is ``shrink.kv_cache_plan``'s output: one KV-head
+    count per layer, 0 for layers whose attention is pruned away (or
+    dropped whole) — those allocate nothing.  This is the serving
+    engine's currency: GQA-aware KV-head pruning is what makes it
+    shrink.
+    """
+    dh = cfg.resolved_head_dim
+    return int(sum(2 * batch * max_len * h * dh * bytes_per_el
+                   for h in kv_heads_plan))
+
+
 def base_time(cfg, env: InferenceEnv) -> float:
     """Unprunable remainder: embeddings, norms, logits head."""
     d, v = cfg.d_model, cfg.vocab_size

@@ -187,6 +187,57 @@ def test_pruned_cache_bytes_match_shrunk_structure(tiny_cfg, tiny_params,
 
 
 # ----------------------------------------------------------------------
+# GQA KV-head pruning + layer drop: per-layer cache-byte accounting
+# ----------------------------------------------------------------------
+
+def test_gqa_kv_head_prune_shrinks_cache_bytes_per_layer():
+    """GQA levels remove KV heads with their query-head groups, so every
+    layer's cache bytes must *strictly* shrink — and a whole-layer drop
+    must allocate zero bytes for that layer."""
+    from repro.configs import smoke_config
+    from repro.core.structures import drop_layer, registry
+    from repro.models import model_init
+    from repro.models.pruned import kv_cache_bytes_per_layer
+    from repro.runtime import costmodel as cm
+
+    cfg = smoke_config("qwen2-72b").replace(num_kv_heads=2, dtype="float32")
+    assert cfg.q_per_kv == 2  # real grouping
+    params, _ = model_init(cfg, jax.random.key(0))
+    db = baseline_database(cfg, params, kind="magnitude")
+    mods = registry(cfg)
+    a = {m.name: (1 if m.kind == "attn" else 0) for m in mods}
+    a = drop_layer(a, mods, 1)  # layer 1 gone entirely
+
+    dense_pm = shrink(cfg, params, db, {m.name: 0 for m in mods})
+    pm = shrink(cfg, params, db, a)
+    nslots = 2
+    dense_bytes = kv_cache_bytes_per_layer(dense_pm, nslots, MAX_LEN)
+    pruned_bytes = kv_cache_bytes_per_layer(pm, nslots, MAX_LEN)
+    assert len(pruned_bytes) == cfg.num_layers
+    for l, (d, p) in enumerate(zip(dense_bytes, pruned_bytes)):
+        assert p < d, f"layer {l} cache bytes did not shrink"
+    assert pruned_bytes[0] == dense_bytes[0] // 2  # 1 of 2 KV heads kept
+    assert pruned_bytes[1] == 0                    # dropped layer: no cache
+
+    # three accountings agree: engine == pruned model == costmodel plan
+    eng = ServeEngine(PrunedServeModel(pm, MAX_LEN), num_slots=nslots)
+    plan = kv_cache_plan(cfg, db, a)
+    assert plan == [1, 0]
+    itemsize = jnp.dtype(jnp.float32).itemsize
+    assert eng.kv_cache_bytes == sum(pruned_bytes)
+    assert eng.kv_cache_bytes == cm.kv_cache_bytes(
+        cfg, plan, nslots, MAX_LEN, bytes_per_el=itemsize)
+
+    # and the engine actually serves through the dropped layer
+    eng.warmup((8,))
+    reqs = synthetic_requests(cfg, 3, seed=5, rate=300.0,
+                              prompt_lens=(5, 9), steps_range=(2, 5))
+    report = eng.run(reqs)
+    assert len(report.records) == len(reqs)
+    assert all(len(r.tokens) > 0 for r in report.records)
+
+
+# ----------------------------------------------------------------------
 # family server: routing + partitioned serving
 # ----------------------------------------------------------------------
 
